@@ -1,0 +1,77 @@
+"""Kernel micro-benchmarks: jnp-oracle wall time on CPU (the interpreter
+validates correctness; these numbers size the CPU fallbacks) + analytic
+MXU-time projections for the TPU target from the kernels' FLOP counts.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+PEAK = 197e12
+
+
+def _time(f, *args, iters=5):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.monotonic()
+    for _ in range(iters):
+        jax.block_until_ready(f(*args))
+    return (time.monotonic() - t0) / iters
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    # lsh_hash: n=8192, d=100, K=128 (multi-table)
+    x = jax.random.normal(key, (8192, 100))
+    a = jax.random.normal(key, (100, 128))
+    b = jnp.zeros((128,))
+    f = jax.jit(lambda x, a, b: ref.lsh_hash_ref(x, a, b, w=0.5))
+    t = _time(f, x, a, b)
+    flops = 2 * 8192 * 100 * 128
+    rows.append(("lsh_hash_8192x100x128", t * 1e6, f"tpu_us={flops/PEAK*1e6:.2f}"))
+
+    # bucket_search: R=512, N=4096, d=64, L=8
+    q = jax.random.normal(key, (512, 64))
+    p = jax.random.normal(key, (4096, 64))
+    qb = jax.random.randint(key, (512, 16), 0, 64, dtype=jnp.int32)
+    probe = jnp.ones((512, 8), jnp.int32)
+    pb = jax.random.randint(key, (4096, 2), 0, 64, dtype=jnp.int32)
+    gid = jnp.arange(4096, dtype=jnp.int32)
+    pv = jnp.ones((4096,), jnp.int32)
+    qsq = jnp.sum(q * q, -1)
+    psq = jnp.sum(p * p, -1)
+    f = jax.jit(lambda *a: ref.bucket_search_ref(*a, 2.0, L=8))
+    t = _time(f, q, qsq, qb, probe, p, psq, pb, gid, pv)
+    flops = 2 * 512 * 4096 * 64
+    rows.append(("bucket_search_512x4096", t * 1e6, f"tpu_us={flops/PEAK*1e6:.2f}"))
+
+    # attention: B1 H8 S1024 dh64
+    qq = jax.random.normal(key, (1, 8, 1024, 64), jnp.bfloat16)
+    f = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v, causal=True))
+    t = _time(f, qq, qq, qq)
+    flops = 4 * 8 * 1024 * 1024 * 64
+    rows.append(("attention_1x8x1024x64", t * 1e6, f"tpu_us={flops/PEAK*1e6:.2f}"))
+
+    # ssd_scan: B1 S1024 H4 P32 N32
+    xs = jax.random.normal(key, (1, 1024, 4, 32)) * 0.3
+    al = jnp.full((4,), -0.7)
+    bb = jax.random.normal(key, (1, 1024, 4, 32)) * 0.3
+    dt = jax.nn.softplus(jax.random.normal(key, (1, 1024, 4)))
+    f = jax.jit(lambda *a: ref.ssd_scan_ref(*a))
+    t = _time(f, xs, al, bb, bb, dt)
+    rows.append(("ssd_scan_1x1024x4x32", t * 1e6, "seq_scan_ref"))
+
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Paper Figure 4.2 + Table 1: Layered vs Sum vs Cauchy vs Simple.
+
+Replicates: runtime-proxy comparison across L (Fig 4.2, wiki) and the
+load-balance distribution over 1024 reduce tasks (Table 1, wiki).
+
+Runtime proxy (no Hadoop here): per-query wall time is dominated by
+shuffle bytes + the max-loaded reducer's work, so we report
+  t_proxy = query_bytes / NET_BW + max_shard_load * ROW_COST
+with the same constants across schemes -- ordering, not absolute time,
+is the claim.
+"""
+from __future__ import annotations
+
+from benchmarks.paper_common import run_scheme
+from repro.core import Scheme
+
+NET_BW = 1e9          # bytes/s
+ROW_COST = 2e-6       # s per stored row scanned on the hot shard
+
+LS = (8, 16, 32, 64)
+
+
+def run(ls=LS):
+    rows = []
+    for L in ls:
+        for scheme in (Scheme.SIMPLE, Scheme.LAYERED, Scheme.SUM,
+                       Scheme.CAUCHY):
+            rep, _ = run_scheme("wiki", scheme, L, n_shards=64)
+            proxy = (rep.query_bytes / NET_BW
+                     + rep.query_load_max * ROW_COST)
+            rows.append(dict(L=L, scheme=scheme.value,
+                             rows=rep.query_rows, bytes=rep.query_bytes,
+                             load_max=rep.query_load_max,
+                             t_proxy=proxy))
+    return rows
+
+
+def table1(n_shards=1024):
+    out = []
+    for scheme in (Scheme.SIMPLE, Scheme.SUM, Scheme.CAUCHY,
+                   Scheme.LAYERED):
+        rep, _ = run_scheme("wiki", scheme, L=16, n_shards=n_shards)
+        out.append(dict(scheme=scheme.value,
+                        data_avg=rep.data_load_avg,
+                        data_max=rep.data_load_max))
+    return out
+
+
+def main():
+    rows = run()
+    print("L,scheme,rows,bytes,load_max,t_proxy_ms")
+    for r in rows:
+        print(f"{r['L']},{r['scheme']},{r['rows']},{r['bytes']},"
+              f"{r['load_max']},{r['t_proxy'] * 1e3:.2f}")
+    print("\nTable-1 (1024 shards, wiki): scheme,data_avg,data_max")
+    t1 = table1()
+    for r in t1:
+        print(f"{r['scheme']},{r['data_avg']:.1f},{r['data_max']}")
+    return rows, t1
+
+
+if __name__ == "__main__":
+    main()

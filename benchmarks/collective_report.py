@@ -1,0 +1,90 @@
+"""Attribute collective / HBM traffic to model code: prints the top
+collectives of a dry-run cell with their trip multipliers and jaxpr
+op_name metadata (which maps to Python source locations).
+
+  PYTHONPATH=src python -m benchmarks.collective_report \
+      --arch codeqwen1.5-7b --shape train_4k
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import re
+
+import jax
+
+from repro.configs import get_config
+from repro.launch import hlo_cost
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh
+
+_META = re.compile(r'op_name="([^"]*)"')
+
+
+def comp_multipliers(comps, entry):
+    mults = {entry: 1.0}
+    order, seen, i = [entry], {entry}, 0
+    while i < len(order):
+        comp = order[i]
+        i += 1
+        for op in comps.get(comp, []):
+            if op.opcode in ("while", "call", "conditional"):
+                trips = 1
+                if op.opcode == "while":
+                    tm = hlo_cost._TRIP_RE.search(op.line)
+                    if tm:
+                        trips = int(tm.group(1))
+                for sub in hlo_cost._CALLED.findall(op.line):
+                    mults[sub] = mults.get(sub, 0) + mults[comp] * trips
+                    if sub not in seen:
+                        seen.add(sub)
+                        order.append(sub)
+    return mults
+
+
+def report(hlo: str, top: int = 15):
+    comps, entry = hlo_cost._parse_computations(hlo)
+    mults = comp_multipliers(comps, entry)
+    rows = []
+    for comp, ops in comps.items():
+        m = mults.get(comp, 0)
+        if m == 0:
+            continue
+        for op in ops:
+            base = (op.opcode[:-6] if op.opcode.endswith("-start")
+                    else op.opcode)
+            if base not in hlo_cost._COLLECTIVES:
+                continue
+            _, b = hlo_cost._shape_numel_bytes(op.type_str)
+            meta = _META.search(op.line)
+            rows.append((b * m, b, m, base,
+                         op.type_str[:48],
+                         meta.group(1)[-110:] if meta else "?"))
+    rows.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"total collective bytes/device: {total / 1e9:.1f} GB")
+    for r in rows[:top]:
+        print(f" {r[0] / 1e9:8.2f}GB {r[1] / 1e6:8.1f}MB x{r[2]:6.0f} "
+              f"{r[3]:13s} {r[4]}\n      @ {r[5]}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+    cfg = get_config(args.arch)
+    mesh = make_production_mesh(multi_pod=args.multi)
+    built = steps_lib.build_step(cfg, mesh, args.shape)
+    with mesh:
+        compiled = built.fn.lower(*built.args).compile()
+    report(compiled.as_text(), args.top)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Shared setup for the paper-replication benchmarks.
+
+Dataset sizes are scaled from the paper's (1M-3M points) to laptop scale;
+all RELATIVE claims (traffic ratios, flat-vs-linear scaling in L, load
+skew ordering) are scale-free, which is what the figures assert.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import LSHConfig, Scheme, simulate
+from repro.data import image_histograms, planted_random, tfidf_like
+
+# paper section 4.2 parameter choices per dataset
+DATASETS = {
+    # name: (loader, d, W, k, r, c)
+    "random": (lambda n, m: planted_random(n, m, d=100, r=0.3)[:2],
+               100, 0.5, 10, 0.3, 2.0),
+    "wiki":   (lambda n, m: tfidf_like(n, m, d=256),
+               256, 0.5, 12, 0.1, 2.0),
+    "image":  (lambda n, m: image_histograms(n, m, d=64),
+               64, 0.3, 16, 0.08, 2.0),
+}
+
+N_DATA = 20_000
+N_QUERY = 2_000
+
+
+def load(name: str, n=N_DATA, m=N_QUERY):
+    loader, d, W, k, r, c = DATASETS[name]
+    data, queries = loader(n, m)
+    return (jnp.asarray(data, jnp.float32),
+            jnp.asarray(queries, jnp.float32), d, W, k, r, c)
+
+
+def run_scheme(name: str, scheme: Scheme, L: int, n_shards: int = 64,
+               recall: bool = False, W=None, k=None):
+    data, queries, d, W0, k0, r, c = load(name)
+    cfg = LSHConfig(d=d, k=k or k0, W=W or W0, r=r, c=c, L=L,
+                    n_shards=n_shards, scheme=scheme, seed=0)
+    t0 = time.monotonic()
+    rep = simulate(cfg, data, queries, compute_recall=recall)
+    rep_time = time.monotonic() - t0
+    return rep, rep_time

@@ -1,0 +1,66 @@
+"""Aggregate experiments/dryrun/*.json into the §Roofline table.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+Emits a markdown table (per arch x shape x mesh): the three terms,
+dominant bottleneck, MODEL_FLOPS ratio, and a one-line "what would move
+the dominant term" note.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+NOTES = {
+    ("compute",): "increase arithmetic intensity: fuse attention (Pallas), "
+                  "drop remat recompute, larger per-device tiles",
+    ("memory",): "cut activation round-trips: flash-attention kernel keeps "
+                 "scores in VMEM; bf16 intermediates; fewer stash copies",
+    ("collective",): "reduce TP psum volume: bf16 reductions, 2 psums/layer "
+                     "(Megatron form), overlap with compute, or shift "
+                     "sharding from TP toward DP/SP",
+}
+
+
+def load_cells(d: str):
+    cells = []
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(p) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_row(c) -> str:
+    if c.get("skipped"):
+        return (f"| {c['arch']} | {c['shape']} | {c['mesh']} | SKIP | - | - "
+                f"| - | - | - | {c['reason'][:60]}... |")
+    if not c.get("ok"):
+        return (f"| {c['arch']} | {c['shape']} | {c['mesh']} | FAIL | - | - "
+                f"| - | - | - | {c.get('error', '')[:60]} |")
+    r = c["roofline"]
+    note = NOTES[(r["bottleneck"],)]
+    return (f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+            f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+            f"| {r['collective_s']:.2e} | **{r['bottleneck']}** "
+            f"| {r['useful_ratio']:.2f} | {r['mfu']:.3f} | {note[:70]} |")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+    cells = load_cells(args.dir)
+    print("| arch | shape | mesh | compute_s | memory_s | collective_s "
+          "| bottleneck | useful | MFU | note |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for c in cells:
+        print(fmt_row(c))
+    ok = sum(1 for c in cells if c.get("ok"))
+    print(f"\n{ok}/{len(cells)} cells ok")
+    return cells
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run          # everything
+  PYTHONPATH=src python -m benchmarks.run --fast   # skip the slow ones
+
+Prints ``name,us_per_call,derived`` CSV blocks per benchmark, then the
+paper-claim checks.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _section(name):
+    print(f"\n===== {name} =====")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args(argv)
+    failures = []
+
+    _section("Fig4.1 shuffle/recall/runtime vs L (simple vs layered)")
+    from benchmarks import bench_shuffle_vs_L
+    t0 = time.monotonic()
+    rows, fails = bench_shuffle_vs_L.main()
+    failures += fails
+    print(f"fig4.1,{(time.monotonic() - t0) * 1e6:.0f},rows={len(rows)}")
+
+    _section("Fig4.2 + Table1 scheme comparison (layered/sum/cauchy)")
+    from benchmarks import bench_schemes
+    t0 = time.monotonic()
+    srows, t1 = bench_schemes.main()
+    # scale-free paper claims: layered beats simple on t_proxy at high L
+    # (Fig 4.2); simple (uniform hash) is the most balanced while every
+    # locality-preserving scheme trades balance for traffic (Table 1).
+    # NOTE: the paper's sum>layered>cauchy skew ORDERING is a property of
+    # the real Wiki corpus; on the synthetic stand-in the ordering
+    # differs, which EXPERIMENTS.md discusses -- we assert only the
+    # qualitative separation.
+    hi = [r for r in srows if r["L"] == max(x["L"] for x in srows)]
+    t_by = {r["scheme"]: r["t_proxy"] for r in hi}
+    if not t_by["layered"] < t_by["simple"]:
+        failures.append("Fig4.2: layered t_proxy not < simple at high L")
+    skew = {r["scheme"]: r["data_max"] / max(r["data_avg"], 1) for r in t1}
+    if not skew["simple"] == min(skew.values()):
+        failures.append(f"Table1: simple not most balanced ({skew})")
+    if not all(skew[s] > 2 * skew["simple"]
+               for s in ("layered", "sum", "cauchy")):
+        failures.append(f"Table1: locality schemes not skewed vs simple "
+                        f"({skew})")
+    print(f"fig4.2,{(time.monotonic() - t0) * 1e6:.0f},schemes=4")
+
+    _section("MPLSH x Layered composition (paper section 5)")
+    from benchmarks import bench_mplsh
+    t0 = time.monotonic()
+    _, mfails = bench_mplsh.main()
+    failures += mfails
+    print(f"mplsh,{(time.monotonic() - t0) * 1e6:.0f},probes=2x4")
+
+    _section("kernel micro-benchmarks")
+    from benchmarks import bench_kernels
+    bench_kernels.main()
+
+    if not args.fast:
+        _section("distributed shard_map index (8 host devices, subprocess)")
+        from benchmarks import bench_distributed
+        t0 = time.monotonic()
+        bench_distributed.main()
+        print(f"distributed,{(time.monotonic() - t0) * 1e6:.0f},devices=8")
+
+        import os
+        from benchmarks import roofline
+        for label, d in (("BASELINE (paper-faithful TP+ZeRO-1)",
+                          "experiments/dryrun"),
+                         ("OPTIMIZED (auto layout + perf pass)",
+                          "experiments/dryrun_opt")):
+            _section(f"roofline table -- {label}")
+            if os.path.isdir(d) and os.listdir(d):
+                roofline.main(["--dir", d])
+            else:
+                print(f"(no artifacts in {d} -- run repro.launch.dryrun)")
+        if os.path.exists("experiments/perf_summary.md"):
+            _section("perf summary (baseline vs optimized)")
+            with open("experiments/perf_summary.md") as f:
+                print(f.read())
+
+    _section("paper-claim checks")
+    if failures:
+        for f in failures:
+            print("FAIL:", f)
+        sys.exit(1)
+    print("all paper-claim checks passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.checkpoint import latest_step, prune_old, restore, save
+__all__ = ["latest_step", "prune_old", "restore", "save"]

@@ -1,0 +1,141 @@
+"""Sharded, atomic, resumable checkpointing.
+
+Layout:  <dir>/step_<N>/
+           manifest.json        -- tree structure, shapes, dtypes, step,
+                                   pipeline state, mesh shape at save time
+           shard_<i>.npz        -- flat leaves, split round-robin into
+                                   `nshards` files (parallel-writable)
+         <dir>/LATEST           -- atomically updated pointer
+
+Elasticity: restore() reassembles full arrays on host and re-places them
+under whatever mesh/sharding the *current* job uses -- a checkpoint saved
+on 256 devices restores fine on 64 or 512 (device_put with the new
+sharding re-slices), which is the checkpoint->re-mesh->restore elastic
+path described in DESIGN.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# dtypes numpy can't round-trip through npz: store as a same-width int view
+_VIEW_DTYPES = {"bfloat16": (np.uint16, ml_dtypes.bfloat16),
+                "float8_e4m3fn": (np.uint8, ml_dtypes.float8_e4m3fn)}
+
+
+def _flatten_with_paths(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(k) for k in path) for path, _ in leaves]
+    vals = [v for _, v in leaves]
+    return paths, vals, treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, extra: Optional[dict] = None,
+         nshards: int = 4) -> str:
+    """Atomic checkpoint write; returns the final step directory."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    paths, vals, _ = _flatten_with_paths(tree)
+    vals = [np.asarray(v) for v in vals]
+
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=f".tmp_step_{step}_")
+    manifest = {
+        "step": step,
+        "leaves": [{"path": p, "shape": list(v.shape), "dtype": str(v.dtype),
+                    "shard": i % nshards}
+                   for i, (p, v) in enumerate(zip(paths, vals))],
+        "nshards": nshards,
+        "extra": extra or {},
+    }
+    def _storable(v: np.ndarray) -> np.ndarray:
+        view = _VIEW_DTYPES.get(str(v.dtype))
+        return v.view(view[0]) if view else v
+
+    for s in range(nshards):
+        arrs = {f"leaf_{i}": _storable(v) for i, v in enumerate(vals)
+                if i % nshards == s}
+        np.savez(os.path.join(tmp, f"shard_{s}.npz"), **arrs)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                       # atomic commit
+    _point_latest(ckpt_dir, f"step_{step}")
+    return final
+
+
+def _point_latest(ckpt_dir: str, name: str):
+    tmp = os.path.join(ckpt_dir, ".LATEST.tmp")
+    with open(tmp, "w") as f:
+        f.write(name)
+    os.replace(tmp, os.path.join(ckpt_dir, "LATEST"))
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    try:
+        with open(os.path.join(ckpt_dir, "LATEST")) as f:
+            name = f.read().strip()
+        return int(name.split("_")[1])
+    except (FileNotFoundError, IndexError, ValueError):
+        return None
+
+
+def restore(ckpt_dir: str, tree_like: Any, *, step: Optional[int] = None,
+            shardings: Any = None) -> tuple[Any, int, dict]:
+    """Restore into the structure of `tree_like`.
+
+    shardings: optional matching tree of NamedSharding -- leaves are
+    device_put with them (the elastic re-shard path).
+    Returns (tree, step, extra).
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    shards = {s: np.load(os.path.join(d, f"shard_{s}.npz"))
+              for s in range(manifest["nshards"])}
+    vals = []
+    for i, leaf in enumerate(manifest["leaves"]):
+        arr = shards[leaf["shard"]][f"leaf_{i}"]
+        view = _VIEW_DTYPES.get(leaf["dtype"])
+        if view is not None:
+            arr = arr.view(view[1])
+        vals.append(arr)
+
+    paths, cur_vals, treedef = _flatten_with_paths(tree_like)
+    by_path = {l["path"]: v for l, v in zip(manifest["leaves"], vals)}
+    out_vals = []
+    for p, cur in zip(paths, cur_vals):
+        if p not in by_path:
+            raise KeyError(f"checkpoint missing leaf {p}")
+        v = by_path[p]
+        if tuple(v.shape) != tuple(cur.shape):
+            raise ValueError(f"shape mismatch at {p}: "
+                             f"{v.shape} vs {cur.shape}")
+        out_vals.append(v.astype(cur.dtype))
+    tree = jax.tree_util.tree_unflatten(treedef, out_vals)
+    if shardings is not None:
+        tree = jax.tree.map(lambda x, s: jax.device_put(x, s),
+                            tree, shardings)
+    return tree, step, manifest["extra"]
+
+
+def prune_old(ckpt_dir: str, keep: int = 3):
+    """Keep the newest `keep` step dirs (garbage collection)."""
+    steps = sorted(
+        int(n.split("_")[1]) for n in os.listdir(ckpt_dir)
+        if n.startswith("step_"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"),
+                      ignore_errors=True)

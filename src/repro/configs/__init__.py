@@ -1,0 +1,39 @@
+"""Assigned architecture configs (--arch <id>) + the paper's LSH datasets."""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "codeqwen1_5_7b",
+    "gemma_7b",
+    "phi3_mini_3_8b",
+    "mistral_nemo_12b",
+    "pixtral_12b",
+    "granite_moe_1b_a400m",
+    "deepseek_v2_lite_16b",
+    "whisper_medium",
+    "mamba2_130m",
+    "recurrentgemma_2b",
+]
+
+_ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+_ALIASES.update({
+    "codeqwen1.5-7b": "codeqwen1_5_7b",
+    "phi3-mini-3.8b": "phi3_mini_3_8b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+})
+
+
+def get_config(name: str, reduced: bool = False):
+    """Load an architecture config by id (dash or underscore form).
+
+    reduced=True returns the small same-family config used by smoke tests.
+    """
+    mod_name = _ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.reduced_config() if reduced else mod.config()
+
+
+def list_archs():
+    return list(ARCHS)

@@ -1,0 +1,26 @@
+"""Core distributed LSH (the paper's contribution).
+
+Layers:
+  config     -- LSHConfig, Scheme, the paper's theoretical bounds
+  hashing    -- p-stable first layer H, second layer G (+ Sum/Cauchy)
+  offsets    -- Entropy-LSH sphere-surface query offsets
+  simulate   -- analytic traffic / load-balance / recall accounting
+  index      -- shard_map all_to_all distributed index (Fig 3.1/3.2)
+  ref_search -- brute-force oracle
+"""
+from repro.core.config import LSHConfig, Scheme, collision_probability, p_collision
+from repro.core.hashing import (HashParams, gamma, gh, g_of, hash_h,
+                                pack_buckets, sample_params, shard_key,
+                                shard_of)
+from repro.core.offsets import batch_query_offsets, query_offsets
+from repro.core.accounting import TrafficReport
+from repro.core.simulate import simulate
+from repro.core.index import DistributedLSHIndex
+
+__all__ = [
+    "LSHConfig", "Scheme", "collision_probability", "p_collision",
+    "HashParams", "gamma", "gh", "g_of", "hash_h", "pack_buckets",
+    "sample_params", "shard_key", "shard_of",
+    "batch_query_offsets", "query_offsets",
+    "TrafficReport", "simulate", "DistributedLSHIndex",
+]

@@ -1,0 +1,79 @@
+"""Network-traffic and load-balance accounting.
+
+The paper's two figures of merit (section 1.1):
+  * total network traffic  -- MapReduce shuffle size / number of DHT calls;
+    here: routed (Key, Value) rows and their wire bytes,
+  * maximum per-machine load -- "curse of the last reducer";
+    here: max rows received by any shard.
+
+On TPU the shuffle is a fixed-capacity all_to_all, so we track BOTH the
+live rows (the paper's metric, what an elastic fabric would ship) and the
+capacity bytes (what the static dense collective ships).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class TrafficReport:
+    scheme: str
+    n_shards: int
+    # ---- query-phase shuffle (the paper's headline metric) ----
+    query_rows: int            # total live (Key, Value) pairs for all queries
+    query_bytes: int           # query_rows * row_bytes
+    fq_mean: float             # mean distinct Keys per query  (Definition 7)
+    fq_max: int                # max over queries
+    fq_bound: float            # Theorem 8 w.h.p. bound (for LAYERED)
+    # ---- index build shuffle (one row per data point) ----
+    data_rows: int
+    data_bytes: int
+    # ---- load balance (Table 1) ----
+    data_load_avg: float       # avg data rows per shard
+    data_load_max: int         # max data rows on any shard
+    query_load_avg: float
+    query_load_max: int
+    # ---- static-collective view (TPU implementation) ----
+    capacity_rows: Optional[int] = None   # rows the dense all_to_all ships
+    capacity_bytes: Optional[int] = None
+    overflow_drops: int = 0               # rows beyond capacity (must be 0)
+    # ---- quality ----
+    recall: Optional[float] = None
+    results_emitted: Optional[int] = None
+
+    def summary(self) -> str:
+        lines = [
+            f"scheme={self.scheme} shards={self.n_shards}",
+            f"  query shuffle: rows={self.query_rows} bytes={self.query_bytes}"
+            f" f_q mean={self.fq_mean:.2f} max={self.fq_max}"
+            f" (thm8 bound {self.fq_bound:.2f})",
+            f"  data  shuffle: rows={self.data_rows} bytes={self.data_bytes}",
+            f"  load balance: data avg={self.data_load_avg:.1f}"
+            f" max={self.data_load_max}"
+            f" | query avg={self.query_load_avg:.1f} max={self.query_load_max}",
+        ]
+        if self.capacity_bytes is not None:
+            lines.append(
+                f"  static a2a: rows={self.capacity_rows}"
+                f" bytes={self.capacity_bytes} drops={self.overflow_drops}")
+        if self.recall is not None:
+            lines.append(f"  recall={self.recall:.3f}"
+                         f" emitted={self.results_emitted}")
+        return "\n".join(lines)
+
+
+def load_stats(loads: np.ndarray) -> tuple[float, int]:
+    return float(np.mean(loads)), int(np.max(loads))
+
+
+def query_row_bytes(d: int) -> int:
+    """A query row is the d-dim float32 point + an int32 global id."""
+    return 4 * (d + 1)
+
+
+def data_row_bytes(d: int) -> int:
+    """A data row is <H(p), p>: point + packed bucket (2x uint32) + id."""
+    return 4 * d + 8 + 4

@@ -1,0 +1,351 @@
+"""Distributed LSH index: the paper's Figure 3.1/3.2 on a JAX device mesh.
+
+Machines = devices along one mesh axis ("shard").  The MapReduce shuffle /
+Active-DHT send becomes a fixed-capacity ``jax.lax.all_to_all`` inside
+``shard_map``:
+
+  build:  every data point p ships one row  (GH(p), <H(p), p, gid>)
+  query:  every query q ships f_q rows      (GH(q+delta_i), <q, qid>)
+          -- one per DISTINCT Key among its offsets (Theorem 8 bounds f_q)
+  search: the receiving shard regenerates the offsets from qid (consistent
+          RNG), selects those whose Key == its own id, and scans its stored
+          rows for bucket-equal points within distance cr (Fig 3.2 Reduce).
+  return: two pmin collectives combine per-shard best candidates.
+
+Static capacities are derived from the scheme's theoretical row bound
+(LSHConfig.pairs_per_query) times a slack factor; overflow is counted and
+must be zero for a valid run (tests assert this).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import accounting
+from repro.core.config import LSHConfig, Scheme
+from repro.core.hashing import (HashParams, hash_h, pack_buckets,
+                                sample_params, shard_key)
+from repro.core.offsets import query_offsets
+
+INF = jnp.float32(jnp.finfo(jnp.float32).max)
+IMAX = jnp.int32(jnp.iinfo(jnp.int32).max)
+
+
+# ---------------------------------------------------------------------------
+# Dense dispatch: scatter rows into a (S*C, ...) send buffer by destination
+# ---------------------------------------------------------------------------
+
+def dispatch_slots(dest: jax.Array, valid: jax.Array, n_shards: int,
+                   capacity: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Compute send-buffer slots for each row.
+
+    Args:
+      dest: (N,) int32 destination shard per row.
+      valid: (N,) bool liveness per row.
+    Returns:
+      slot: (N,) int32 position in the (S*C,) buffer (= S*C for dropped),
+      keep: (N,) bool rows that fit,
+      drops: () int32 number of live rows beyond capacity.
+    """
+    N = dest.shape[0]
+    big = jnp.where(valid, dest, n_shards)  # invalid rows sort last
+    order = jnp.argsort(big)                # stable
+    dsorted = big[order]
+    starts = jnp.searchsorted(dsorted, jnp.arange(n_shards + 1))
+    rank_sorted = jnp.arange(N) - starts[jnp.clip(dsorted, 0, n_shards)]
+    rank = jnp.zeros((N,), jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+    keep = valid & (rank < capacity)
+    slot = jnp.where(keep, dest * capacity + rank, n_shards * capacity)
+    drops = jnp.sum(valid & ~keep).astype(jnp.int32)
+    return slot.astype(jnp.int32), keep, drops
+
+
+def scatter_rows(slot: jax.Array, keep: jax.Array, rows: jax.Array,
+                 n_slots: int, fill) -> jax.Array:
+    """Scatter (N, ...) rows into a (n_slots, ...) buffer (drop overflow)."""
+    buf = jnp.full((n_slots + 1,) + rows.shape[1:], fill, dtype=rows.dtype)
+    buf = buf.at[slot].set(jnp.where(
+        keep.reshape((-1,) + (1,) * (rows.ndim - 1)), rows,
+        jnp.asarray(fill, rows.dtype)))
+    return buf[:n_slots]
+
+
+def _a2a(x: jax.Array, axis_name: str) -> jax.Array:
+    """Tiled all_to_all over the leading (S*C) dimension."""
+    return jax.lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0,
+                              tiled=True)
+
+
+# ---------------------------------------------------------------------------
+# Index
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BuildResult:
+    store_x: jax.Array        # (S, N_store, d) per-shard stored points
+    store_packed: jax.Array   # (S, N_store, 2) packed H buckets
+    store_gid: jax.Array      # (S, N_store) global data ids
+    store_valid: jax.Array    # (S, N_store) bool
+    data_load: np.ndarray     # (S,) live rows stored per shard
+    drops: int                # capacity overflow (must be 0)
+
+
+@dataclasses.dataclass
+class QueryResult:
+    best_dist: np.ndarray     # (m,) sqrt distance of best within cr (inf if none)
+    best_gid: np.ndarray      # (m,) global id of best candidate (IMAX if none)
+    n_within_cr: np.ndarray   # (m,) candidates emitted within cr
+    fq: np.ndarray            # (m,) rows shipped per query (Definition 7)
+    query_load: np.ndarray    # (S,) live rows received per shard
+    drops: int
+
+
+class DistributedLSHIndex:
+    """One hash table of the paper's scheme, distributed over a mesh axis.
+
+    Multiple tables are independent instances (the paper: "multiple hash
+    tables can be obviously implemented in parallel").
+    """
+
+    def __init__(self, cfg: LSHConfig, mesh: Mesh, axis: str = "shard",
+                 slack: float = 4.0, use_kernel: bool = False):
+        """use_kernel=True routes the per-shard bucket search through the
+        Pallas streaming kernel (kernels/bucket_search.py) instead of the
+        jnp mask formulation -- identical results (tested), O(R*N) score
+        matrix never materialised."""
+        if mesh.shape[axis] != cfg.n_shards:
+            raise ValueError(
+                f"mesh axis {axis}={mesh.shape[axis]} != n_shards={cfg.n_shards}")
+        self.cfg = cfg
+        self.mesh = mesh
+        self.axis = axis
+        self.slack = slack
+        self.use_kernel = use_kernel
+        key = jax.random.PRNGKey(cfg.seed)
+        kp, kq = jax.random.split(key)
+        self.params = sample_params(kp, cfg)
+        self.base_key = kq
+        self.build_result: Optional[BuildResult] = None
+
+    # ------------------------------------------------------------------
+    def _data_capacity(self, n_local: int) -> int:
+        if self.cfg.data_capacity is not None:
+            return self.cfg.data_capacity
+        S = self.cfg.n_shards
+        return max(8, int(math.ceil(n_local / S * self.slack)))
+
+    def _query_capacity(self, m_local: int) -> int:
+        if self.cfg.query_capacity is not None:
+            return self.cfg.query_capacity
+        S = self.cfg.n_shards
+        rows = m_local * self.cfg.pairs_per_query()
+        return max(8, int(math.ceil(rows / S * self.slack)))
+
+    # ------------------------------------------------------------------
+    def build(self, data: jax.Array) -> BuildResult:
+        """Route every data point to its home shard and store it.
+
+        Args:
+          data: (n, d) global array; will be sharded over the mesh axis.
+        """
+        cfg, params = self.cfg, self.params
+        S = cfg.n_shards
+        n, d = data.shape
+        if n % S:
+            raise ValueError(f"n={n} must divide by n_shards={S}")
+        n_loc = n // S
+        C = self._data_capacity(n_loc)
+        axis = self.axis
+
+        def build_shard(x_loc: jax.Array, gid_loc: jax.Array):
+            hk = hash_h(params, x_loc, cfg.W)              # (n_loc, k)
+            packed = pack_buckets(params, hk)              # (n_loc, 2)
+            dest = jnp.mod(shard_key(params, cfg, hk), S).astype(jnp.int32)
+            valid = jnp.ones((n_loc,), bool)
+            slot, keep, drops = dispatch_slots(dest, valid, S, C)
+            nslots = S * C
+            sx = scatter_rows(slot, keep, x_loc, nslots, 0.0)
+            sp = scatter_rows(slot, keep, packed, nslots, 0)
+            sg = scatter_rows(slot, keep, gid_loc, nslots, IMAX)
+            sv = scatter_rows(slot, keep,
+                              keep.astype(jnp.int8), nslots, 0)
+            rx = _a2a(sx, axis)
+            rp = _a2a(sp, axis)
+            rg = _a2a(sg, axis)
+            rv = _a2a(sv, axis).astype(bool)
+            load = rv.sum().astype(jnp.int32)
+            return (rx[None], rp[None], rg[None], rv[None],
+                    load[None], drops[None])
+
+        gids = jnp.arange(n, dtype=jnp.int32)
+        spec_in = P(axis)
+        fn = jax.jit(jax.shard_map(
+            build_shard, mesh=self.mesh,
+            in_specs=(spec_in, spec_in),
+            out_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis)),
+            check_vma=False,   # pallas out_shape has no vma annotation
+        ))
+        rx, rp, rg, rv, load, drops = fn(data, gids)
+        self.build_result = BuildResult(
+            store_x=rx, store_packed=rp, store_gid=rg, store_valid=rv,
+            data_load=np.asarray(load), drops=int(np.asarray(drops).sum()))
+        return self.build_result
+
+    # ------------------------------------------------------------------
+    def query(self, queries: jax.Array) -> QueryResult:
+        """Answer a batch of queries (m, d), m divisible by n_shards."""
+        if self.build_result is None:
+            raise RuntimeError("call build() first")
+        cfg, params, base_key = self.cfg, self.params, self.base_key
+        S, L, d = cfg.n_shards, cfg.L, cfg.d
+        m = queries.shape[0]
+        if m % S:
+            raise ValueError(f"m={m} must divide by n_shards={S}")
+        m_loc = m // S
+        Cq = self._query_capacity(m_loc)
+        axis = self.axis
+        br = self.build_result
+        cr2 = jnp.float32((cfg.c * cfg.r) ** 2)
+
+        def offsets_of(qid, q):
+            return query_offsets(base_key, qid, q, L, cfg.r)
+
+        def keys_of(offs):
+            """Offsets (L, d) -> (Key, packedH) per offset."""
+            hk = hash_h(params, offs, cfg.W)            # (L, k)
+            packed = pack_buckets(params, hk)           # (L, 2)
+            keyv = shard_key(params, cfg, hk)           # (L,)
+            return keyv, packed
+
+        def live_mask(keyv, packed):
+            if cfg.scheme == Scheme.SIMPLE:
+                eq = jnp.all(packed[:, None, :] == packed[None, :, :], -1)
+            else:
+                eq = keyv[:, None] == keyv[None, :]
+            earlier = jnp.arange(L)[:, None] > jnp.arange(L)[None, :]
+            return ~jnp.any(eq & earlier, axis=-1)      # (L,)
+
+        def query_shard(q_loc, qid_loc, store_x, store_packed, store_gid,
+                        store_valid):
+            # stores arrive with a leading per-shard block dim of 1
+            store_x, store_packed = store_x[0], store_packed[0]
+            store_gid, store_valid = store_gid[0], store_valid[0]
+            me = jax.lax.axis_index(axis)
+            # ---- route ----
+            offs = jax.vmap(offsets_of)(qid_loc, q_loc)      # (m_loc, L, d)
+            keyv, packed = jax.vmap(keys_of)(offs)
+            live = jax.vmap(live_mask)(keyv, packed)         # (m_loc, L)
+            dest = jnp.mod(keyv, S).astype(jnp.int32)
+            rows_q = jnp.repeat(q_loc, L, axis=0)            # (m_loc*L, d)
+            rows_id = jnp.repeat(qid_loc, L)
+            slot, keep, drops = dispatch_slots(
+                dest.reshape(-1), live.reshape(-1), S, Cq)
+            nslots = S * Cq
+            sq = scatter_rows(slot, keep, rows_q, nslots, 0.0)
+            sid = scatter_rows(slot, keep, rows_id, nslots, IMAX)
+            rq = _a2a(sq, axis)                               # (S*Cq, d)
+            rid = _a2a(sid, axis)                             # (S*Cq,)
+            rvalid = rid != IMAX
+            recv_load = rvalid.sum().astype(jnp.int32)
+            fq_local = live.sum(axis=1).astype(jnp.int32)     # (m_loc,)
+
+            # Two rows of one query can land on the same shard when two
+            # distinct Keys collide mod S (always possible for SIMPLE,
+            # rare otherwise).  Each row probes ALL buckets owned by this
+            # shard, so keep only the first row per qid to avoid double
+            # emits.
+            R = rid.shape[0]
+            eqid = (rid[:, None] == rid[None, :])
+            earlier_r = jnp.arange(R)[:, None] > jnp.arange(R)[None, :]
+            dup_row = jnp.any(eqid & earlier_r, axis=1)
+            rvalid = rvalid & ~dup_row
+
+            # ---- regenerate offsets & select buckets owned by me ----
+            roffs = jax.vmap(offsets_of)(jnp.where(rvalid, rid, 0), rq)
+            rkey, rpacked = jax.vmap(keys_of)(roffs)          # (R, L), (R, L, 2)
+            mine = (jnp.mod(rkey, S) == me) & rvalid[:, None]  # (R, L)
+            # first-occurrence dedupe of H-buckets within the selected set
+            eqp = jnp.all(rpacked[:, :, None, :] == rpacked[:, None, :, :], -1)
+            earlier = jnp.arange(L)[:, None] > jnp.arange(L)[None, :]
+            firstocc = ~jnp.any(eqp & earlier[None], axis=-1)
+            probe = mine & firstocc                            # (R, L)
+
+            # ---- bucket search (Fig 3.2 Reduce body) ----
+            if self.use_kernel:
+                from repro.kernels import ops as kops
+                qb = jax.lax.bitcast_convert_type(
+                    rpacked, jnp.int32).reshape(rpacked.shape[0], -1)
+                pb = jax.lax.bitcast_convert_type(store_packed, jnp.int32)
+                row_best, row_gid, row_emit = kops.bucket_search(
+                    rq, jnp.sum(rq ** 2, -1), qb,
+                    probe.astype(jnp.int32),
+                    store_x, jnp.sum(store_x ** 2, -1), pb,
+                    store_gid, store_valid.astype(jnp.int32),
+                    float(np.float32((cfg.c * cfg.r) ** 2)), L=L)
+                row_gid = jnp.where(row_best < INF, row_gid, IMAX)
+            else:
+                # match[rrow, srow] = stored bucket equals one of my probes
+                match = jnp.any(
+                    (rpacked[:, :, None, 0] == store_packed[None, None, :, 0])
+                    & (rpacked[:, :, None, 1] == store_packed[None, None, :, 1])
+                    & probe[:, :, None], axis=1)               # (R, Ns)
+                match = match & store_valid[None, :]
+                d2 = (jnp.sum(rq ** 2, -1)[:, None]
+                      + jnp.sum(store_x ** 2, -1)[None, :]
+                      - 2.0 * rq @ store_x.T)                  # (R, Ns)
+                d2 = jnp.maximum(d2, 0.0)
+                hit = match & (d2 <= cr2)
+                d2m = jnp.where(hit, d2, INF)
+                row_best = jnp.min(d2m, axis=1)                # (R,)
+                row_arg = jnp.argmin(d2m, axis=1)
+                row_gid = jnp.where(row_best < INF, store_gid[row_arg],
+                                    IMAX)
+                row_emit = hit.sum(axis=1).astype(jnp.int32)
+
+            # ---- combine across shards (result return path) ----
+            qid_safe = jnp.where(rvalid, rid, m)  # scatter sink row m
+            best = jnp.full((m + 1,), INF).at[qid_safe].min(
+                jnp.where(rvalid, row_best, INF))
+            gbest = jax.lax.pmin(best, axis)                   # (m+1,)
+            cand = jnp.where(
+                rvalid & (row_best <= gbest[qid_safe]) & (row_best < INF),
+                row_gid, IMAX)
+            gidbuf = jnp.full((m + 1,), IMAX,
+                              jnp.int32).at[qid_safe].min(cand)
+            ggid = jax.lax.pmin(gidbuf, axis)
+            emit = jnp.zeros((m + 1,), jnp.int32).at[qid_safe].add(
+                jnp.where(rvalid, row_emit, 0))
+            gemit = jax.lax.psum(emit, axis)
+            return (gbest[:m][None], ggid[:m][None], gemit[:m][None],
+                    fq_local[None], recv_load[None], drops[None])
+
+        spec = P(axis)
+        fn = jax.jit(jax.shard_map(
+            query_shard, mesh=self.mesh,
+            in_specs=(spec, spec, spec, spec, spec, spec),
+            out_specs=(spec, spec, spec, spec, spec, spec),
+            check_vma=False,   # pallas out_shape has no vma annotation
+        ))
+        qids = jnp.arange(m, dtype=jnp.int32)
+        gbest, ggid, gemit, fq, load, drops = fn(
+            queries, qids, br.store_x, br.store_packed, br.store_gid,
+            br.store_valid)
+        # every shard computed the same global (m,) buffers; take shard 0
+        gbest = np.asarray(gbest)[0]
+        ggid = np.asarray(ggid)[0]
+        gemit = np.asarray(gemit)[0]
+        return QueryResult(
+            best_dist=np.sqrt(np.where(gbest < np.float32(3e38), gbest,
+                                       np.inf)),
+            best_gid=ggid,
+            n_within_cr=gemit,
+            fq=np.asarray(fq).reshape(-1),
+            query_load=np.asarray(load),
+            drops=int(np.asarray(drops).sum()))

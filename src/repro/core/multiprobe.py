@@ -1,0 +1,99 @@
+"""Multi-Probe LSH (Lv et al., VLDB'07) -- query-directed probing.
+
+Instead of Entropy LSH's random sphere offsets, MPLSH probes the buckets
+"closest" to the query: each hash coordinate i sits at distance
+frac(Gamma_i) from its lower bucket boundary and 1-frac from the upper,
+and a perturbation set Delta (coords to shift +-1) is scored by the sum
+of those boundary distances. Probes are the n_probes cheapest sets.
+
+The paper (section 4.2) uses MPLSH as the FIRST layer for the Wiki
+dataset and notes (section 5) that Layered LSH composes with it: we
+re-hash the probed bucket vectors through G exactly as with entropy
+offsets. Probes are a deterministic function of the query, so any shard
+can regenerate them (no RNG consistency machinery needed).
+
+This implementation enumerates all single-coordinate perturbations plus
+all pairs among the PAIR_POOL best singles -- the exact algorithm's
+probe sequence restricted to |Delta| <= 2, which covers the practical
+n_probes <= 2k regime.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import LSHConfig
+from repro.core.hashing import HashParams, gamma
+
+PAIR_POOL = 8  # pairs drawn from the best 8 single perturbations
+
+
+def _candidates(k: int):
+    """Static candidate list: (coord_a, delta_a, coord_b, delta_b) with
+    b == -1 meaning a single-coordinate probe."""
+    singles = [(i, -1, -1, 0) for i in range(k)] + \
+              [(i, +1, -1, 0) for i in range(k)]
+    return singles
+
+
+def mplsh_probes(params: HashParams, cfg: LSHConfig, q: jax.Array,
+                 n_probes: int) -> jax.Array:
+    """Probe bucket vectors for one query: (n_probes + 1, k) int32,
+    row 0 = the home bucket H(q)."""
+    k = cfg.k
+    g = gamma(params, q, cfg.W)                    # (k,)
+    home = jnp.floor(g).astype(jnp.int32)
+    frac = g - home                                 # in [0, 1)
+
+    # scores of the 2k single-coordinate perturbations
+    s_low = frac                                    # shift -1
+    s_high = 1.0 - frac                             # shift +1
+    single_scores = jnp.concatenate([s_low, s_high])        # (2k,)
+    single_delta = jnp.concatenate([-jnp.ones(k), jnp.ones(k)])
+    single_coord = jnp.concatenate([jnp.arange(k), jnp.arange(k)])
+
+    # pair candidates among the PAIR_POOL best singles
+    pool = min(PAIR_POOL, 2 * k)
+    top_s, top_i = jax.lax.top_k(-single_scores, pool)      # cheapest
+    top_s = -top_s
+    pi, pj = jnp.triu_indices(pool, 1)
+    pair_scores = top_s[pi] + top_s[pj]
+    # drop pairs touching the same coordinate twice
+    same = (single_coord[top_i[pi]] == single_coord[top_i[pj]])
+    pair_scores = jnp.where(same, jnp.inf, pair_scores)
+
+    all_scores = jnp.concatenate([single_scores, pair_scores])
+    n_cand = all_scores.shape[0]
+    n_take = min(n_probes, n_cand)
+    _, order = jax.lax.top_k(-all_scores, n_take)
+
+    # build each probe's bucket vector
+    def build(idx):
+        def single(i):
+            return home.at[single_coord[i]].add(
+                single_delta[i].astype(jnp.int32))
+
+        def pair(i):
+            a, b = top_i[pi[i]], top_i[pj[i]]
+            out = home.at[single_coord[a]].add(
+                single_delta[a].astype(jnp.int32))
+            return out.at[single_coord[b]].add(
+                single_delta[b].astype(jnp.int32))
+
+        return jax.lax.cond(idx < 2 * k, single,
+                            lambda i: pair(i - 2 * k), idx)
+
+    probes = jax.vmap(build)(order)                 # (n_take, k)
+    out = jnp.concatenate([home[None], probes], axis=0)
+    if n_take < n_probes:                           # pad by repeating home
+        out = jnp.concatenate(
+            [out, jnp.tile(home[None], (n_probes - n_take, 1))], axis=0)
+    return out
+
+
+def batch_mplsh_probes(params: HashParams, cfg: LSHConfig,
+                       qs: jax.Array, n_probes: int) -> jax.Array:
+    """(m, d) queries -> (m, n_probes + 1, k) probe bucket vectors."""
+    return jax.vmap(lambda q: mplsh_probes(params, cfg, q, n_probes))(qs)

@@ -1,0 +1,42 @@
+"""Entropy-LSH query offsets (Panigrahy, SODA'06).
+
+Offsets q + delta_i, i = 1..L, with delta_i drawn uniformly from the
+*surface* of the sphere B(q, r) -- normalised Gaussian directions scaled
+to radius r.  The paper requires the offsets to be generated consistently
+on every machine ("Choose ... consistently across Mappers"); we derive the
+RNG key from a global per-query id so any shard can regenerate them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def offset_directions(key: jax.Array, L: int, d: int) -> jax.Array:
+    """(L, d) unit vectors, uniform on the sphere."""
+    g = jax.random.normal(key, (L, d), dtype=jnp.float32)
+    norm = jnp.linalg.norm(g, axis=-1, keepdims=True)
+    return g / jnp.maximum(norm, 1e-12)
+
+
+def query_offsets(base_key: jax.Array, qid: jax.Array, q: jax.Array,
+                  L: int, r: float) -> jax.Array:
+    """Offsets for one query point.
+
+    Args:
+      base_key: shared RNG key (consistent across shards).
+      qid: scalar int32 global query id -- folds into the key so every
+        machine regenerates identical offsets for the same query.
+      q: (d,) query point.
+    Returns:
+      (L, d) array of q + delta_i on the surface of B(q, r).
+    """
+    key = jax.random.fold_in(base_key, qid)
+    dirs = offset_directions(key, L, q.shape[-1])
+    return q[None, :] + jnp.float32(r) * dirs
+
+
+def batch_query_offsets(base_key: jax.Array, qids: jax.Array, qs: jax.Array,
+                        L: int, r: float) -> jax.Array:
+    """(m, L, d) offsets for a batch of queries (m, d)."""
+    return jax.vmap(lambda i, q: query_offsets(base_key, i, q, L, r))(qids, qs)

@@ -1,0 +1,168 @@
+"""Analytic cluster simulator: exact traffic / load-balance / recall numbers
+for any shard count WITHOUT building a device mesh.
+
+This computes the same quantities the distributed `index.py` path produces
+(cross-checked in tests at small shard counts), but vectorised over the
+whole dataset, so benchmarks can reproduce the paper's 1024-reducer Table 1
+and the Fig 4.1 shuffle-size curves quickly on one host.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import accounting
+from repro.core.config import LSHConfig, Scheme
+from repro.core.hashing import (HashParams, hash_h, pack_buckets,
+                                sample_params, shard_key, shard_of)
+from repro.core.offsets import batch_query_offsets
+
+
+def _dedupe_mask_2d(vals: jax.Array) -> jax.Array:
+    """(m, L) int32 -> bool mask marking the FIRST occurrence of each value
+    within each row (the paper's 'for each unique value x in the set')."""
+    dup = (vals[:, :, None] == vals[:, None, :])  # (m, L, L)
+    idx = jnp.arange(vals.shape[1])
+    earlier = idx[None, :, None] > idx[None, None, :]  # j earlier than i
+    seen_before = jnp.any(dup & earlier, axis=-1)
+    return ~seen_before
+
+
+def _dedupe_mask_packed(packed: jax.Array) -> jax.Array:
+    """(m, L, 2) packed buckets -> first-occurrence mask (m, L)."""
+    eq = jnp.all(packed[:, :, None, :] == packed[:, None, :, :], axis=-1)
+    idx = jnp.arange(packed.shape[1])
+    earlier = idx[None, :, None] > idx[None, None, :]
+    return ~jnp.any(eq & earlier, axis=-1)
+
+
+@dataclasses.dataclass
+class SimState:
+    cfg: LSHConfig
+    params: HashParams
+    base_key: jax.Array
+
+
+def make_sim(cfg: LSHConfig) -> SimState:
+    key = jax.random.PRNGKey(cfg.seed)
+    kp, kq = jax.random.split(key)
+    return SimState(cfg, sample_params(kp, cfg), kq)
+
+
+def simulate(cfg: LSHConfig, data: jax.Array, queries: jax.Array,
+             compute_recall: bool = False,
+             data_chunk: int = 4096) -> accounting.TrafficReport:
+    """Run the full accounting for one scheme on one dataset.
+
+    Args:
+      data: (n, d) float32 data points.
+      queries: (m, d) float32 query points.
+      compute_recall: if True, run the exact (chunked) candidate search and
+        report the paper's recall metric (>=1 point within r returned).
+    """
+    sim = make_sim(cfg)
+    params, base_key = sim.params, sim.base_key
+    n, d = data.shape
+    m = queries.shape[0]
+    S = cfg.n_shards
+
+    # ---------------- index build: one row per data point ----------------
+    hk_data = hash_h(params, data, cfg.W)              # (n, k)
+    data_shard = shard_of(params, cfg, hk_data)        # (n,)
+    data_load = np.bincount(np.asarray(data_shard), minlength=S)
+
+    # ---------------- query routing ----------------
+    qids = jnp.arange(m, dtype=jnp.int32)
+    if cfg.probes == "mplsh":
+        from repro.core.multiprobe import batch_mplsh_probes
+        hk_off = batch_mplsh_probes(params, cfg, queries, cfg.L)
+    else:
+        offs = batch_query_offsets(base_key, qids, queries, cfg.L, cfg.r)
+        hk_off = hash_h(params, offs, cfg.W)           # (m, L, k)
+    keys_off = shard_key(params, cfg, hk_off)          # (m, L) int32
+    if cfg.scheme == Scheme.SIMPLE:
+        # one pair per distinct H-bucket (the Key is the bucket id)
+        packed_off = pack_buckets(params, hk_off)      # (m, L, 2)
+        live = _dedupe_mask_packed(packed_off)
+    else:
+        # one pair per distinct GH value
+        live = _dedupe_mask_2d(keys_off)
+    dest = jnp.mod(keys_off, S).astype(jnp.int32)      # (m, L)
+
+    fq = live.sum(axis=1)                              # (m,)
+    live_np = np.asarray(live)
+    dest_np = np.asarray(dest)
+    query_load = np.bincount(dest_np[live_np], minlength=S)
+
+    query_rows = int(np.asarray(fq).sum())
+    fq_mean = float(np.asarray(fq).mean())
+    fq_max = int(np.asarray(fq).max())
+
+    report = accounting.TrafficReport(
+        scheme=cfg.scheme.value,
+        n_shards=S,
+        query_rows=query_rows,
+        query_bytes=query_rows * accounting.query_row_bytes(d),
+        fq_mean=fq_mean,
+        fq_max=fq_max,
+        fq_bound=cfg.fq_bound(),
+        data_rows=n,
+        data_bytes=n * accounting.data_row_bytes(d),
+        data_load_avg=float(data_load.mean()),
+        data_load_max=int(data_load.max()),
+        query_load_avg=float(query_load.mean()),
+        query_load_max=int(query_load.max()),
+    )
+
+    if compute_recall:
+        rec, emitted = _exact_search_recall(
+            cfg, params, data, queries, hk_off, data_chunk)
+        report.recall = rec
+        report.results_emitted = emitted
+    return report
+
+
+def _exact_search_recall(cfg: LSHConfig, params: HashParams,
+                         data: jax.Array, queries: jax.Array,
+                         hk_off: jax.Array,
+                         data_chunk: int) -> tuple[float, int]:
+    """Chunked exact candidate search.
+
+    A data point p is a candidate for query q iff H(p) equals H(q+delta_i)
+    for some offset i (note: placement scheme does NOT change the candidate
+    set -- GH is a function of H, so bucket-mates are always co-located
+    with the routed query row).  Recall = fraction of queries for which a
+    returned candidate lies within distance r.
+    """
+    m, L, _ = hk_off.shape
+    packed_off = pack_buckets(params, hk_off)          # (m, L, 2)
+    r2 = jnp.float32(cfg.r ** 2)
+    cr2 = jnp.float32((cfg.c * cfg.r) ** 2)
+    q_sq = jnp.sum(queries ** 2, axis=-1)              # (m,)
+
+    def chunk_stats(chunk: jax.Array, packed_chunk: jax.Array):
+        # (m, B) candidate mask
+        eq = jnp.all(packed_off[:, :, None, :] == packed_chunk[None, None],
+                     axis=-1)                          # (m, L, B)
+        cand = jnp.any(eq, axis=1)                     # (m, B)
+        d2 = (q_sq[:, None] + jnp.sum(chunk ** 2, axis=-1)[None, :]
+              - 2.0 * queries @ chunk.T)
+        hit_r = jnp.any(cand & (d2 <= r2), axis=1)     # (m,)
+        emit = jnp.sum(cand & (d2 <= cr2))
+        return hit_r, emit
+
+    chunk_stats = jax.jit(chunk_stats)
+    hits = np.zeros((m,), dtype=bool)
+    emitted = 0
+    n = data.shape[0]
+    packed_data = pack_buckets(params, hash_h(params, data, cfg.W))
+    for s in range(0, n, data_chunk):
+        e = min(n, s + data_chunk)
+        h, em = chunk_stats(data[s:e], packed_data[s:e])
+        hits |= np.asarray(h)
+        emitted += int(em)
+    return float(hits.mean()), emitted

@@ -1,0 +1,6 @@
+from repro.data.datasets import (planted_random, tfidf_like, image_histograms)
+from repro.data.pipeline import TokenPipeline, PipelineState
+from repro.data.dedup import dedup_embeddings
+
+__all__ = ["planted_random", "tfidf_like", "image_histograms",
+           "TokenPipeline", "PipelineState", "dedup_embeddings"]

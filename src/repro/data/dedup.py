@@ -1,0 +1,51 @@
+"""Training-data near-duplicate detection using the paper's distributed
+LSH layout -- the classic dedup pipeline as a data pre-pass.
+
+Every example embedding is both a data point and a query against the
+index; an example is a duplicate if a *different* example lies within
+radius r.  Uses the analytic simulator path (exact same hash math as the
+distributed index) so it runs at any shard count.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.config import LSHConfig, Scheme
+from repro.core.hashing import hash_h, pack_buckets, sample_params
+import jax
+
+
+def dedup_embeddings(emb: np.ndarray, r: float, k: int = 12,
+                     W: float = 0.5, seed: int = 0,
+                     chunk: int = 2048) -> np.ndarray:
+    """Returns a boolean keep-mask (first occurrence of each near-dup
+    cluster is kept)."""
+    n, d = emb.shape
+    cfg = LSHConfig(d=d, k=k, W=W, r=r, c=2.0, L=1, n_shards=1,
+                    scheme=Scheme.LAYERED, seed=seed)
+    params = sample_params(jax.random.PRNGKey(seed), cfg)
+    x = jnp.asarray(emb, jnp.float32)
+    packed = np.asarray(pack_buckets(params, hash_h(params, x, W)))
+    # group by bucket; within a bucket do exact pairwise distance
+    order = np.lexsort((packed[:, 1], packed[:, 0]))
+    keep = np.ones((n,), bool)
+    r2 = r * r
+    s = 0
+    ps = packed[order]
+    while s < n:
+        e = s
+        while e < n and (ps[e] == ps[s]).all():
+            e += 1
+        if e - s > 1:
+            idx = order[s:e]
+            pts = emb[idx]
+            d2 = ((pts[:, None, :] - pts[None, :, :]) ** 2).sum(-1)
+            for i in range(len(idx)):
+                if not keep[idx[i]]:
+                    continue
+                dup = (d2[i] <= r2)
+                dup[: i + 1] = False
+                keep[idx[dup]] = False
+        s = e
+    return keep

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+  lsh_hash        -- fused p-stable projection hash (the Map phase)
+  bucket_search   -- streaming bucket-constrained NN scan (the Reduce UDF)
+  flash_attention -- online-softmax attention (LM serving prefill)
+  ssd_scan        -- Mamba-2 SSD chunked scan (SSM archs)
+
+Each kernel: <name>.py (pallas_call + BlockSpec), validated in
+interpret=True mode against the pure-jnp oracle in ref.py; ops.py holds
+the padded/jit'd public wrappers.
+"""
+from repro.kernels.ops import bucket_search, flash_attention, lsh_hash, ssd_scan
+
+__all__ = ["bucket_search", "flash_attention", "lsh_hash", "ssd_scan"]

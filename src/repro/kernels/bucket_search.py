@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: streaming bucket-constrained nearest-neighbour scan.
+
+The Reduce/UDF inner loop of the paper (Fig 3.2): for every received query
+row, find the closest stored point among those whose packed H-bucket
+matches one of the query's *probed* offset buckets, subject to the
+distance threshold (cr)^2.
+
+Fusion story: the (TILE_R, TILE_N) pairwise-distance tile comes off the
+MXU (via -2 Q P^T plus norm epilogue), and the bucket-equality mask, the
+threshold filter and the running (best, argbest, hit-count) reduction all
+happen in the same VMEM residency -- the O(R*N) distance matrix never
+reaches HBM.
+
+Grid: (row tiles, point tiles); the point axis is minor-most, so the
+output blocks for a row tile are revisited across point tiles and act as
+the running accumulator (standard TPU streaming-reduction pattern).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_R = 128
+TILE_N = 128
+F32_MAX = float(jnp.finfo(jnp.float32).max)
+
+
+def _bucket_search_kernel(q_ref, qsq_ref, qb_ref, probe_ref,
+                          p_ref, psq_ref, pb_ref, gid_ref, pvalid_ref,
+                          cr2_ref,
+                          best_ref, arg_ref, cnt_ref, *, L: int):
+    j = pl.program_id(1)
+
+    q = q_ref[...].astype(jnp.float32)            # (TR, d)
+    p = p_ref[...].astype(jnp.float32)            # (TN, d)
+    d2 = (qsq_ref[...].reshape(-1, 1) + psq_ref[...].reshape(1, -1)
+          - 2.0 * jax.lax.dot_general(
+              q, p, (((1,), (1,)), ((), ())),
+              preferred_element_type=jnp.float32))  # (TR, TN)
+    d2 = jnp.maximum(d2, 0.0)
+
+    # bucket match: OR over the L probed buckets of each query row
+    qb = qb_ref[...]                              # (TR, 2*L) int32 pairs
+    pb = pb_ref[...]                              # (TN, 2)
+    probe = probe_ref[...]                        # (TR, L) int32 0/1
+    match = jnp.zeros(d2.shape, jnp.bool_)
+    for l in range(L):
+        eq = ((qb[:, 2 * l, None] == pb[None, :, 0])
+              & (qb[:, 2 * l + 1, None] == pb[None, :, 1]))
+        match = match | (eq & (probe[:, l, None] > 0))
+    match = match & (pvalid_ref[...].reshape(1, -1) > 0)
+
+    hit = match & (d2 <= cr2_ref[0, 0])
+    d2m = jnp.where(hit, d2, F32_MAX)
+    tile_best = jnp.min(d2m, axis=1)              # (TR,)
+    # argbest without gather (TPU-friendly): min of gids at the best dist
+    gid = gid_ref[...]                            # (TN,)
+    imax = jnp.int32(jnp.iinfo(jnp.int32).max)
+    at_best = hit & (d2m <= tile_best[:, None])
+    tile_gid = jnp.min(jnp.where(at_best, gid[None, :], imax), axis=1)
+    tile_cnt = jnp.sum(hit, axis=1).astype(jnp.int32)
+
+    @pl.when(j == 0)
+    def _init():
+        best_ref[...] = tile_best
+        arg_ref[...] = tile_gid
+        cnt_ref[...] = tile_cnt
+
+    @pl.when(j > 0)
+    def _accum():
+        prev = best_ref[...]
+        better = tile_best < prev
+        best_ref[...] = jnp.where(better, tile_best, prev)
+        arg_ref[...] = jnp.where(better, tile_gid, arg_ref[...])
+        cnt_ref[...] = cnt_ref[...] + tile_cnt
+
+
+@functools.partial(jax.jit, static_argnames=("L", "interpret"))
+def bucket_search_pallas(q, qsq, qbuckets, probe, p, psq, pbuckets, gid,
+                         pvalid, cr2, *, L: int, interpret: bool = False):
+    """Streaming masked NN scan.
+
+    Args:
+      q: (R, d) query rows;          qsq: (R,) squared norms.
+      qbuckets: (R, 2*L) int32 -- packed (hi, lo) per probed offset bucket.
+      probe: (R, L) int32 -- 1 where this offset bucket should be searched.
+      p: (N, d) stored points;       psq: (N,) squared norms.
+      pbuckets: (N, 2) int32 packed bucket per stored point.
+      gid: (N,) int32 global ids;    pvalid: (N,) int32 0/1.
+      cr2: scalar threshold (c*r)^2.
+    Returns:
+      best (R,) f32 min masked distance^2 (F32_MAX if none),
+      bestgid (R,) int32, count (R,) int32 hits within cr.
+    """
+    R, d = q.shape
+    N = p.shape[0]
+    assert R % TILE_R == 0 and N % TILE_N == 0, (R, N)
+    grid = (R // TILE_R, N // TILE_N)
+    kernel = functools.partial(_bucket_search_kernel, L=L)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_R, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((TILE_R,), lambda i, j: (i,)),
+            pl.BlockSpec((TILE_R, 2 * L), lambda i, j: (i, 0)),
+            pl.BlockSpec((TILE_R, L), lambda i, j: (i, 0)),
+            pl.BlockSpec((TILE_N, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((TILE_N,), lambda i, j: (j,)),
+            pl.BlockSpec((TILE_N, 2), lambda i, j: (j, 0)),
+            pl.BlockSpec((TILE_N,), lambda i, j: (j,)),
+            pl.BlockSpec((TILE_N,), lambda i, j: (j,)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE_R,), lambda i, j: (i,)),
+            pl.BlockSpec((TILE_R,), lambda i, j: (i,)),
+            pl.BlockSpec((TILE_R,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R,), jnp.float32),
+            jax.ShapeDtypeStruct((R,), jnp.int32),
+            jax.ShapeDtypeStruct((R,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, qsq, qbuckets, probe, p, psq, pbuckets, gid, pvalid,
+      jnp.full((1, 1), cr2, jnp.float32))

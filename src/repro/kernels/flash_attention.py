@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: FlashAttention-style online-softmax attention.
+
+Used by the LM serving path (32k prefill shapes): K/V stream through VMEM
+in (TILE_K, head_dim) blocks while the (m, l, acc) running statistics stay
+resident, so the O(S^2) score matrix never materialises in HBM.
+
+GQA is handled in the head index map (q head -> kv head = qh // group).
+Causal masking skips fully-masked KV tiles via the grid's index map
+arithmetic plus an in-tile triangular mask.
+
+Grid: (batch*q_heads, q tiles, kv tiles) -- kv minor-most so the output
+block and the VMEM scratch accumulate across kv tiles.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TILE_Q = 128
+TILE_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, seq_k: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr[...], NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr[...])
+        acc_scr[...] = jnp.zeros_like(acc_scr[...])
+
+    q = q_ref[0].astype(jnp.float32) * scale      # (TQ, dh)
+    k = k_ref[0].astype(jnp.float32)              # (TK, dh)
+    v = v_ref[0].astype(jnp.float32)              # (TK, dh)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (TQ, TK)
+
+    if causal:
+        rows = qi * TILE_Q + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 0)
+        cols = kj * TILE_K + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(rows >= cols, s, NEG_INF)
+    # mask KV padding beyond true seq_k
+    cols = kj * TILE_K + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(cols < seq_k, s, NEG_INF)
+
+    m_prev = m_scr[...]                            # (TQ, 1)
+    m_cur = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_cur)                         # (TQ, TK)
+    corr = jnp.exp(m_prev - m_cur)                 # (TQ, 1)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_cur
+
+    @pl.when(kj == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "scale", "seq_k", "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True,
+                           scale: float | None = None,
+                           seq_k: int | None = None,
+                           interpret: bool = False) -> jax.Array:
+    """Attention over (B, H, Sq, dh) vs (B, Hkv, Sk, dh); H % Hkv == 0.
+
+    Sq, Sk must be multiples of the tile sizes (pad in ops.py); seq_k is
+    the true (pre-padding) kv length -- columns beyond it are masked.
+    """
+    B, H, Sq, dh = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert H % Hkv == 0
+    group = H // Hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(dh)
+    if seq_k is None:
+        seq_k = Sk
+    assert Sq % TILE_Q == 0 and Sk % TILE_K == 0
+
+    qf = q.reshape(B * H, Sq, dh)
+    kf = k.reshape(B * Hkv, Sk, dh)
+    vf = v.reshape(B * Hkv, Sk, dh)
+
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               seq_k=seq_k)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, Sq // TILE_Q, Sk // TILE_K),
+        in_specs=[
+            pl.BlockSpec((1, TILE_Q, dh), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, TILE_K, dh),
+                         lambda h, i, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, TILE_K, dh),
+                         lambda h, i, j, g=group: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, TILE_Q, dh), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((TILE_Q, 1), jnp.float32),
+            pltpu.VMEM((TILE_Q, 1), jnp.float32),
+            pltpu.VMEM((TILE_Q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sq, dh)

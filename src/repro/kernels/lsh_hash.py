@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: fused p-stable LSH hash  H(X) = floor((X @ A + b) / W).
+
+The Map phase's only FLOP-heavy op. On TPU the projection runs on the MXU
+and the bias/scale/floor epilogue fuses into the same VMEM tile, so the
+int32 bucket ids never round-trip through HBM in f32 form.
+
+Tiling: rows of X in (TILE_N, d) VMEM blocks; A is small ((d, K) with
+K = k * n_tables padded to a lane multiple) and stays resident. Grid is
+1-D over row tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 128
+LANE = 128
+
+
+def _lsh_hash_kernel(x_ref, a_ref, b_ref, inv_w_ref, out_ref):
+    x = x_ref[...].astype(jnp.float32)           # (TILE_N, d)
+    a = a_ref[...].astype(jnp.float32)           # (d, K)
+    proj = jax.lax.dot_general(
+        x, a, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)      # MXU
+    proj = (proj + b_ref[...]) * inv_w_ref[0, 0]
+    out_ref[...] = jnp.floor(proj).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("w", "interpret"))
+def lsh_hash_pallas(x: jax.Array, a: jax.Array, b: jax.Array, *,
+                    w: float, interpret: bool = False) -> jax.Array:
+    """floor((x @ a + b)/w) -> int32, shape (n, K).
+
+    n must be a multiple of TILE_N and K a multiple of LANE (pad in ops.py).
+    """
+    n, d = x.shape
+    K = a.shape[1]
+    assert n % TILE_N == 0 and K % LANE == 0, (n, K)
+    inv_w = jnp.full((1, 1), 1.0 / w, jnp.float32)
+    return pl.pallas_call(
+        _lsh_hash_kernel,
+        grid=(n // TILE_N,),
+        in_specs=[
+            pl.BlockSpec((TILE_N, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, K), lambda i: (0, 0)),
+            pl.BlockSpec((1, K), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_N, K), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, K), jnp.int32),
+        interpret=interpret,
+    )(x, a, b.reshape(1, K), inv_w)

@@ -1,0 +1,106 @@
+"""Public wrappers for the Pallas kernels.
+
+Each op pads inputs to kernel tile multiples, dispatches to the Pallas
+kernel (interpret=True on CPU -- TPU v5e is the compile target, this
+container validates in the interpreter), and unpads. ``use_kernel=False``
+falls back to the jnp oracle, which the dry-run / XLA path also uses for
+sharded lowering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.bucket_search import (TILE_N, TILE_R,
+                                         bucket_search_pallas)
+from repro.kernels.flash_attention import (TILE_K, TILE_Q,
+                                           flash_attention_pallas)
+from repro.kernels.lsh_hash import LANE, TILE_N as HASH_TILE_N, lsh_hash_pallas
+from repro.kernels.ssd_scan import CHUNK, ssd_scan_pallas
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+
+def lsh_hash(x: jax.Array, a: jax.Array, b: jax.Array, *, w: float,
+             use_kernel: bool = True) -> jax.Array:
+    """Fused floor((x@a+b)/w) -> int32 (n, k)."""
+    if not use_kernel:
+        return ref.lsh_hash_ref(x, a, b, w=w)
+    n, k = x.shape[0], a.shape[1]
+    xp = _pad_to(x, 0, HASH_TILE_N)
+    ap = _pad_to(a, 1, LANE)
+    bp = _pad_to(b, 0, LANE)
+    out = lsh_hash_pallas(xp, ap, bp, w=w, interpret=_on_cpu())
+    return out[:n, :k]
+
+
+def bucket_search(q, qsq, qbuckets, probe, p, psq, pbuckets, gid, pvalid,
+                  cr2, *, L: int, use_kernel: bool = True):
+    """Streaming masked NN scan; see bucket_search_pallas."""
+    if not use_kernel:
+        return ref.bucket_search_ref(q, qsq, qbuckets, probe, p, psq,
+                                     pbuckets, gid, pvalid, cr2, L=L)
+    R, N = q.shape[0], p.shape[0]
+    qp = _pad_to(q, 0, TILE_R)
+    qsqp = _pad_to(qsq, 0, TILE_R)
+    qbp = _pad_to(qbuckets, 0, TILE_R)
+    prp = _pad_to(probe, 0, TILE_R)          # padded rows probe nothing
+    pp = _pad_to(p, 0, TILE_N)
+    psqp = _pad_to(psq, 0, TILE_N)
+    pbp = _pad_to(pbuckets, 0, TILE_N)
+    gidp = _pad_to(gid, 0, TILE_N, value=jnp.iinfo(jnp.int32).max)
+    pvp = _pad_to(pvalid, 0, TILE_N)         # padded points invalid
+    best, bgid, cnt = bucket_search_pallas(
+        qp, qsqp, qbp, prp, pp, psqp, pbp, gidp, pvp, cr2, L=L,
+        interpret=_on_cpu())
+    return best[:R], bgid[:R], cnt[:R]
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale=None,
+                    use_kernel: bool = True):
+    """(B,H,Sq,dh) x (B,Hkv,Sk,dh) -> (B,H,Sq,dh)."""
+    if not use_kernel:
+        return ref.attention_ref(q, k, v, causal=causal, scale=scale)
+    B, H, Sq, dh = q.shape
+    Sk = k.shape[2]
+    qp = _pad_to(q, 2, TILE_Q)
+    kp = _pad_to(k, 2, TILE_K)
+    vp = _pad_to(v, 2, TILE_K)
+    # causal mask handles padded q rows; seq_k mask handles padded kv
+    out = flash_attention_pallas(qp, kp, vp, causal=causal, scale=scale,
+                                 seq_k=Sk, interpret=_on_cpu())
+    return out[:, :, :Sq, :]
+
+
+def ssd_scan(x, a_log, b, c, dt, *, use_kernel: bool = True):
+    """Mamba-2 SSD scan; broadcasts B/C groups to heads for the kernel."""
+    if not use_kernel:
+        return ref.ssd_scan_ref(x, a_log, b, c, dt)
+    B, S, H, P = x.shape
+    G = b.shape[2]
+    rep = H // G
+    bq = jnp.repeat(b, rep, axis=2)
+    cq = jnp.repeat(c, rep, axis=2)
+    xp = _pad_to(x, 1, CHUNK)
+    bp = _pad_to(bq, 1, CHUNK)
+    cp = _pad_to(cq, 1, CHUNK)
+    dtp = _pad_to(dt, 1, CHUNK)              # dt=0 -> identity steps
+    out = ssd_scan_pallas(xp, a_log, bp, cp, dtp, interpret=_on_cpu())
+    return out[:, :S]

@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function mirrors its kernel's contract exactly, with no tiling and
+no VMEM reasoning -- plain jnp ops only.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+F32_MAX = jnp.float32(jnp.finfo(jnp.float32).max)
+IMAX = jnp.int32(jnp.iinfo(jnp.int32).max)
+
+
+def lsh_hash_ref(x: jax.Array, a: jax.Array, b: jax.Array, *,
+                 w: float) -> jax.Array:
+    """floor((x @ a + b) / w) as int32."""
+    proj = (x.astype(jnp.float32) @ a.astype(jnp.float32)
+            + b.astype(jnp.float32)) / jnp.float32(w)
+    return jnp.floor(proj).astype(jnp.int32)
+
+
+def bucket_search_ref(q, qsq, qbuckets, probe, p, psq, pbuckets, gid,
+                      pvalid, cr2, *, L: int):
+    """Masked NN scan; see bucket_search_pallas for the contract."""
+    d2 = qsq[:, None] + psq[None, :] - 2.0 * q @ p.T
+    d2 = jnp.maximum(d2, 0.0)
+    qb = qbuckets.reshape(q.shape[0], L, 2)
+    match = jnp.any(
+        (qb[:, :, 0, None] == pbuckets[None, None, :, 0])
+        & (qb[:, :, 1, None] == pbuckets[None, None, :, 1])
+        & (probe[:, :, None] > 0), axis=1)
+    match = match & (pvalid[None, :] > 0)
+    hit = match & (d2 <= cr2)
+    d2m = jnp.where(hit, d2, F32_MAX)
+    best = jnp.min(d2m, axis=1)
+    at_best = hit & (d2m <= best[:, None])
+    bestgid = jnp.min(jnp.where(at_best, gid[None, :], IMAX), axis=1)
+    cnt = jnp.sum(hit, axis=1).astype(jnp.int32)
+    return best, bestgid, cnt
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  scale: float | None = None) -> jax.Array:
+    """Exact softmax attention with GQA broadcast; f32 accumulation."""
+    B, H, Sq, dh = q.shape
+    _, Hkv, Sk, _ = k.shape
+    group = H // Hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(dh)
+    kq = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vq = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale, kq)
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        s = jnp.where(mask[None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, vq).astype(q.dtype)
+
+
+def ssd_scan_ref(x, a_log, b, c, dt, *, chunk: int = 64) -> jax.Array:
+    """Mamba-2 SSD (state-space dual) sequential reference.
+
+    Args:
+      x:     (B, S, H, P)  inputs per head
+      a_log: (H,)          log of -A (positive decay rate per head)
+      b:     (B, S, G, N)  input->state projection (G groups broadcast to H)
+      c:     (B, S, G, N)  state->output projection
+      dt:    (B, S, H)     softplus-activated step sizes
+    Returns:
+      y: (B, S, H, P)
+    """
+    B, S, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    bq = jnp.repeat(b, rep, axis=2)  # (B, S, H, N)
+    cq = jnp.repeat(c, rep, axis=2)
+    a = -jnp.exp(a_log)              # (H,)
+    decay = jnp.exp(a[None, None, :] * dt)  # (B, S, H)
+
+    def step(state, inp):
+        xb, bb, cb, db, dtb = inp    # (B,H,P),(B,H,N),(B,H,N),(B,H),(B,H)
+        state = state * db[..., None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", xb * dtb[..., None], bb)
+        y = jnp.einsum("bhpn,bhn->bhp", state, cb)
+        return state, y
+
+    state0 = jnp.zeros((B, H, P, N), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(bq, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(cq, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(decay, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunked scan (state-space duality form).
+
+arXiv:2405.21060 §6: the sequence splits into chunks of length CHUNK; the
+intra-chunk term is a masked-decay "attention" (C B^T ∘ L) X that runs on
+the MXU, and the inter-chunk term is a (P, N) state recurrence carried in
+VMEM scratch across the chunk grid dimension. All decay exponents are
+<= 0, so every exp() is in (0, 1] -- no overflow.
+
+Grid: (B*H, n_chunks), chunks minor-most (sequential state carry).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK = 128
+
+
+def _ssd_kernel(x_ref, b_ref, c_ref, dt_ref, alog_ref, y_ref, state_scr):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr[...])
+
+    x = x_ref[0].astype(jnp.float32)        # (Q, P)
+    b = b_ref[0].astype(jnp.float32)        # (Q, N)
+    c = c_ref[0].astype(jnp.float32)        # (Q, N)
+    dt = dt_ref[0].astype(jnp.float32)      # (Q, 1)
+    a = -jnp.exp(alog_ref[0, 0])            # scalar, < 0
+
+    lam = a * dt                            # (Q, 1) <= 0
+    cum = jnp.cumsum(lam, axis=0)           # (Q, 1) decreasing
+    total = cum[-1:, :]                     # (1, 1)
+
+    state = state_scr[...]                  # (P, N)
+    # inter-chunk: y_t = exp(cum_t) * c_t . state_prev
+    y_inter = jnp.exp(cum) * jax.lax.dot_general(
+        c, state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)           # (Q, P)
+
+    # intra-chunk: (C B^T ∘ L) (x * dt),  L_ij = exp(cum_i - cum_j) [i>=j]
+    scores = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    decay = jnp.exp(cum - cum.reshape(1, -1))          # (Q, Q)
+    rows = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    l_mask = (rows >= cols).astype(jnp.float32)
+    xdt = x * dt                                       # (Q, P)
+    y_intra = jax.lax.dot_general(
+        scores * decay * l_mask, xdt, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)            # (Q, P)
+
+    y_ref[0] = (y_inter + y_intra).astype(y_ref.dtype)
+
+    # state' = exp(total) * state + sum_t exp(total - cum_t) dt_t x_t b_t^T
+    w = jnp.exp(total - cum)                            # (Q, 1)
+    state_scr[...] = (jnp.exp(total) * state
+                      + jax.lax.dot_general(
+                          xdt * w, b, (((0,), (0,)), ((), ())),
+                          preferred_element_type=jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_scan_pallas(x, a_log, b, c, dt, *, interpret: bool = False):
+    """SSD scan; same contract as ref.ssd_scan_ref but G must equal H
+    (broadcast b/c to heads in ops.py). S must divide by CHUNK."""
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    assert b.shape[2] == H and c.shape[2] == H, "broadcast groups first"
+    assert S % CHUNK == 0
+    xf = jnp.moveaxis(x, 2, 1).reshape(B * H, S, P)
+    bf = jnp.moveaxis(b, 2, 1).reshape(B * H, S, N)
+    cf = jnp.moveaxis(c, 2, 1).reshape(B * H, S, N)
+    dtf = jnp.moveaxis(dt, 2, 1).reshape(B * H, S, 1)
+    alog = jnp.tile(a_log.reshape(1, H), (B, 1)).reshape(B * H, 1)
+
+    out = pl.pallas_call(
+        _ssd_kernel,
+        grid=(B * H, S // CHUNK),
+        in_specs=[
+            pl.BlockSpec((1, CHUNK, P), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, CHUNK, N), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, CHUNK, N), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, CHUNK, 1), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, 1), lambda h, i: (h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, CHUNK, P), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xf, bf, cf, dtf, alog)
+    return jnp.moveaxis(out.reshape(B, H, S, P), 1, 2)

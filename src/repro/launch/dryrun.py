@@ -1,0 +1,164 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes, print memory/cost analysis, and extract the
+roofline terms. MUST be run as its own process (the device-count override
+above binds at first jax init -- hence it precedes every other import).
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch codeqwen1.5-7b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Results are written incrementally to experiments/dryrun/<cell>.json.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import get_config, list_archs
+from repro.launch import hlo_analysis as ha
+from repro.launch import hlo_cost
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
+             force: bool = False, keep_hlo: bool = False) -> dict:
+    mesh_name = "multi" if multi_pod else "single"
+    cell = f"{arch}__{shape}__{mesh_name}"
+    out_path = os.path.join(out_dir, cell + ".json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name, "ok": False}
+    ok, reason = steps_lib.shape_applicable(cfg, shape)
+    if not ok:
+        rec.update({"skipped": True, "reason": reason, "ok": True})
+        _write(out_path, rec)
+        print(f"[dryrun] {cell}: SKIP ({reason})")
+        return rec
+
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_dev = mesh.devices.size
+        t0 = time.monotonic()
+        built = steps_lib.build_step(cfg, mesh, shape)
+        with mesh:
+            lowered = built.fn.lower(*built.args)
+            t_lower = time.monotonic() - t0
+            t0 = time.monotonic()
+            compiled = lowered.compile()
+            t_compile = time.monotonic() - t0
+
+        mem = compiled.memory_analysis()
+        print(mem)                                   # proves it fits
+        cost = compiled.cost_analysis()
+        print({k: cost[k] for k in ("flops", "bytes accessed")
+               if k in cost})
+        hlo = compiled.as_text()
+        coll = ha.collective_bytes(hlo)              # loop-unaware (ref)
+        # trip-count-aware hierarchical cost model (see hlo_cost.py):
+        # cost_analysis counts while bodies once, so scanned-layer models
+        # would be understated by the layers x microbatches trip product.
+        tc = hlo_cost.analyze(hlo)
+
+        s = steps_lib.SHAPES[shape]
+        n_tokens = s["batch"] * (s["seq"] if s["kind"] != "decode" else 1)
+        mf = ha.model_flops(cfg, shape, n_tokens)
+        rl = ha.roofline(
+            flops=tc.flops,
+            hbm_bytes=tc.hbm_bytes,
+            coll_bytes=tc.coll_bytes,
+            model_flops=mf, n_devices=n_dev)
+
+        rec.update({
+            "ok": True,
+            "n_devices": n_dev,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "code_bytes": mem.generated_code_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "peak_per_device_gb": round(
+                    (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                     + mem.temp_size_in_bytes
+                     - mem.alias_size_in_bytes) / 2**30, 3),
+            },
+            "cost": {k: v for k, v in cost.items()
+                     if isinstance(v, (int, float))},
+            "collectives": coll,
+            "trip_aware": {
+                "flops": tc.flops,
+                "hbm_bytes": tc.hbm_bytes,
+                "coll_bytes": tc.coll_bytes,
+                "coll_by_kind": tc.coll_by_kind,
+                "unknown_trip_loops": tc.unknown_trip_loops,
+            },
+            "roofline": rl.to_dict(),
+        })
+        if keep_hlo:
+            with open(os.path.join(out_dir, cell + ".hlo.txt"), "w") as f:
+                f.write(hlo)
+        print(f"[dryrun] {cell}: OK compile={t_compile:.1f}s "
+              f"bottleneck={rl.bottleneck} "
+              f"terms(c/m/l)=({rl.compute_s:.2e},{rl.memory_s:.2e},"
+              f"{rl.collective_s:.2e})s mfu~{rl.mfu:.2f}")
+    except Exception as e:  # noqa: BLE001 -- record the failure, keep going
+        rec.update({"error": str(e)[:2000],
+                    "traceback": traceback.format_exc()[-4000:]})
+        print(f"[dryrun] {cell}: FAIL {e}")
+    _write(out_path, rec)
+    return rec
+
+
+def _write(path: str, rec: dict):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None,
+                    choices=list(steps_lib.SHAPES) + [None])
+    ap.add_argument("--mesh", type=str, default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", type=str, default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--keep-hlo", action="store_true")
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(steps_lib.SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                results.append(run_cell(arch, shape, mp, args.out,
+                                        force=args.force,
+                                        keep_hlo=args.keep_hlo))
+    n_ok = sum(r.get("ok", False) for r in results)
+    print(f"[dryrun] {n_ok}/{len(results)} cells OK")
+    if n_ok < len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

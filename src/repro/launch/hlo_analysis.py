@@ -1,0 +1,129 @@
+"""HLO inspection: collective-traffic extraction + roofline terms.
+
+cost_analysis() gives per-device HLO FLOPs / bytes, but NOT collective
+bytes -- those are parsed from the optimized HLO text by summing the
+result-shape bytes of every all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute (async "-start" forms counted once).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Optional
+
+# TPU v5e-like hardware model (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(.+?)\s+(" + "|".join(_COLLECTIVES) + r")(-start)?\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes moved by collectives, by op kind."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(type_str)
+        counts[kind] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                # per-device HLO flops
+    hbm_bytes: float            # per-device bytes accessed
+    coll_bytes: float           # per-device collective bytes
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float          # 6*N*D (active), GLOBAL
+    useful_ratio: float         # model_flops / (flops * n_devices)
+    step_time_s: float          # max of the three terms
+    mfu: float                  # model_flops / (step_time * chips * peak)
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline(flops: float, hbm_bytes: float, coll_bytes: float,
+             model_flops: float, n_devices: int) -> Roofline:
+    ct = flops / PEAK_FLOPS
+    mt = hbm_bytes / HBM_BW
+    lt = coll_bytes / ICI_BW
+    terms = {"compute": ct, "memory": mt, "collective": lt}
+    bottleneck = max(terms, key=terms.get)
+    step = max(ct, mt, lt)
+    total_flops = flops * n_devices
+    return Roofline(
+        flops=flops, hbm_bytes=hbm_bytes, coll_bytes=coll_bytes,
+        compute_s=ct, memory_s=mt, collective_s=lt,
+        bottleneck=bottleneck,
+        model_flops=model_flops,
+        useful_ratio=model_flops / total_flops if total_flops else 0.0,
+        step_time_s=step,
+        mfu=(model_flops / (step * n_devices * PEAK_FLOPS))
+        if step > 0 else 0.0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Analytic model FLOPs: 6 * N_active * tokens
+# ---------------------------------------------------------------------------
+
+def active_params(cfg) -> int:
+    """Parameter count with MoE expert weights scaled by top_k/n_experts."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models import init_params
+
+    shapes = jax.eval_shape(lambda k: init_params(k, cfg),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    flat, _ = jax.tree_util.tree_flatten_with_path(shapes)
+    total = 0
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(k, "key", k)) for k in path)
+        n = math.prod(leaf.shape)
+        if re.search(r"moe/w_(gate|up|down)", pstr):
+            n = int(n * cfg.moe.top_k / cfg.moe.n_experts)
+        total += n
+    return total
+
+
+def model_flops(cfg, shape_name: str, n_tokens: int) -> float:
+    """6*N_active*D for train (fwd+bwd), 2*N_active*D for inference."""
+    n = active_params(cfg)
+    mult = 6.0 if shape_name.startswith("train") else 2.0
+    return mult * n * n_tokens

@@ -1,0 +1,365 @@
+"""Trip-count-aware cost extraction from optimized HLO text.
+
+XLA's compiled.cost_analysis() counts every while-loop body exactly ONCE,
+so for a scanned-layers/microbatched model it understates FLOPs, bytes
+and collective traffic by the loop trip product (layers x microbatches x
+attention chunks). This module re-derives the three roofline inputs by
+parsing the HLO module hierarchically:
+
+  flops       -- exact MXU flops of every `dot` (2 * numel(out) * K),
+                 including dots inside fusion bodies;
+  hbm bytes   -- operand + result bytes of every materialising op, with
+                 fusions counted at their boundary (internals live in
+                 registers/VMEM -- the right HBM model);
+  collectives -- result-shape bytes of all-reduce / all-gather /
+                 reduce-scatter / all-to-all / collective-permute;
+
+each scaled by the product of enclosing while-loop trip counts
+(backend_config known_trip_count, default 1 + warning).
+
+This is a static cost model: per-device numbers for the SPMD module.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# ops that don't touch HBM (bookkeeping / layout only)
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "reshape",
+    "custom-call", "rng-get-and-update-state", "opt-barrier",
+}
+
+# raw elementwise ops: on the TPU target these fuse into their producers/
+# consumers, so they carry no HBM traffic of their own. (The CPU-backend
+# HLO we parse leaves many of them unfused -- counting them would inflate
+# the memory term by the chain length x loop trips.)
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "compare", "select", "convert", "exponential", "log", "tanh",
+    "rsqrt", "sqrt", "power", "negate", "abs", "and", "or", "not",
+    "xor", "clamp", "floor", "ceil", "round-nearest-afz", "sign",
+    "is-finite", "atan2", "expm1", "log1p", "logistic", "cbrt",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "broadcast", "rem", "erf",
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{$")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([a-z][a-z0-9\-]*)\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_CALLED = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_DIMS_RE = {
+    "lhs_c": re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}"),
+}
+
+
+def _shape_numel_bytes(type_str: str) -> Tuple[int, int]:
+    numel_total, bytes_total = 0, 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        numel_total += n
+        bytes_total += n * _DTYPE_BYTES[dt]
+    return numel_total, bytes_total
+
+
+@dataclasses.dataclass
+class OpInfo:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+    operands: List[str]
+
+
+@dataclasses.dataclass
+class CompTotals:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: Optional[dict] = None
+    unknown_trip_loops: int = 0
+
+    def __post_init__(self):
+        if self.coll_by_kind is None:
+            self.coll_by_kind = {k: 0.0 for k in _COLLECTIVES}
+
+    def add(self, other: "CompTotals", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        for k in _COLLECTIVES:
+            self.coll_by_kind[k] += other.coll_by_kind[k] * mult
+        self.unknown_trip_loops += other.unknown_trip_loops
+
+
+def _parse_computations(hlo: str) -> Tuple[Dict[str, List[OpInfo]], str]:
+    comps: Dict[str, List[OpInfo]] = {}
+    entry = None
+    cur: Optional[str] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            if line.endswith("{"):
+                m = _COMP_HDR.match(line.strip())
+                if m:
+                    cur = m.group(1)
+                    comps[cur] = []
+                    if line.strip().startswith("ENTRY"):
+                        entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode = m.group(1), m.group(2), m.group(3)
+        paren = line[m.end() - 1:]
+        depth, i = 0, 0
+        for i, ch in enumerate(paren):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        args = paren[1:i]
+        operands = re.findall(r"%([\w.\-]+)", args)
+        comps[cur].append(OpInfo(name, type_str, opcode, line, operands))
+    return comps, entry
+
+
+def _dot_flops(op: OpInfo, symtab: Dict[str, str]) -> float:
+    out_numel, _ = _shape_numel_bytes(op.type_str)
+    m = _DIMS_RE["lhs_c"].search(op.line)
+    k = 1
+    if m and op.operands:
+        lhs_type = symtab.get(op.operands[0], "")
+        shapes = _SHAPE_RE.findall(lhs_type)
+        if shapes:
+            dims = [int(d) for d in shapes[0][1].split(",") if d]
+            for idx in m.group(1).split(","):
+                if idx and int(idx) < len(dims):
+                    k *= dims[int(idx)]
+    return 2.0 * out_numel * k
+
+
+def analyze(hlo: str) -> CompTotals:
+    comps, entry = _parse_computations(hlo)
+    symtabs = {c: {op.name: op.type_str for op in ops}
+               for c, ops in comps.items()}
+    memo: Dict[str, CompTotals] = {}
+    fusion_flops_memo: Dict[str, float] = {}
+
+    def fusion_flops(comp: str) -> float:
+        """Dot flops inside a fusion body (recursively)."""
+        if comp in fusion_flops_memo:
+            return fusion_flops_memo[comp]
+        total = 0.0
+        for op in comps.get(comp, []):
+            if op.opcode == "dot":
+                total += _dot_flops(op, symtabs[comp])
+            elif op.opcode == "fusion":
+                cm = _CALLED.search(op.line)
+                if cm:
+                    total += fusion_flops(cm.group(1))
+        fusion_flops_memo[comp] = total
+        return total
+
+    fusion_mem_memo: Dict[str, float] = {}
+
+    def fusion_mem_bytes(comp: str) -> float:
+        """HBM traffic of one fusion invocation, body-aware:
+
+        * a body parameter consumed ONLY by dynamic-slice ops is read at
+          the slice size, not the full operand (the scan-over-layers
+          pattern: the stacked (L, ...) params array is sliced per trip);
+        * a root that is a dynamic-update-slice writes the update size,
+          not the full buffer (in-place aliasing -- the remat-stash and
+          KV-cache-update patterns);
+        * everything else: full parameter/output size.
+        """
+        if comp in fusion_mem_memo:
+            return fusion_mem_memo[comp]
+        body = comps.get(comp, [])
+        symtab = symtabs.get(comp, {})
+        total = 0.0
+        # names that flow (through free/elementwise ops) into a DUS
+        # destination (operand 0) -- those buffers alias in place on the
+        # TPU target, so their full-size "read" is not real traffic.
+        dus_dest: set = set()
+        for u in body:
+            if u.opcode == "dynamic-update-slice" and u.operands:
+                dus_dest.add(u.operands[0])
+        changed = True
+        while changed:
+            changed = False
+            for u in body:
+                if (u.name in dus_dest
+                        and (u.opcode in _FREE_OPS
+                             or u.opcode in _ELEMENTWISE)):
+                    for o in u.operands:
+                        if o not in dus_dest:
+                            dus_dest.add(o)
+                            changed = True
+        # reads
+        for p_op in body:
+            if p_op.opcode != "parameter":
+                continue
+            if p_op.name in dus_dest:
+                continue                      # in-place destination
+            users = [u for u in body if p_op.name in u.operands]
+            if users and all(u.opcode == "dynamic-slice" for u in users):
+                total += sum(_shape_numel_bytes(u.type_str)[1]
+                             for u in users)
+            else:
+                total += _shape_numel_bytes(p_op.type_str)[1]
+        # writes (resolve through free/elementwise wrappers to find DUS)
+        by_name = {o.name: o for o in body}
+
+        def resolve(op_):
+            seen = 0
+            while (op_.opcode in _FREE_OPS or op_.opcode in _ELEMENTWISE) \
+                    and op_.operands and seen < 8:
+                nxt = by_name.get(op_.operands[0])
+                if nxt is None:
+                    break
+                op_ = nxt
+                seen += 1
+            return op_
+
+        root = next((o for o in body if "ROOT" in o.line), None)
+        if root is not None:
+            root_ops = [root]
+            if root.opcode == "tuple":
+                root_ops = [by_name[n] for n in root.operands
+                            if n in by_name]
+            for r in root_ops:
+                rr = resolve(r)
+                if rr.opcode == "dynamic-update-slice" and len(rr.operands) >= 2:
+                    upd = rr.operands[1]
+                    total += _shape_numel_bytes(symtab.get(upd, ""))[1]
+                else:
+                    total += _shape_numel_bytes(r.type_str)[1]
+        fusion_mem_memo[comp] = total
+        return total
+
+    fusion_free_memo: Dict[str, bool] = {}
+
+    def fusion_is_free(comp: str) -> bool:
+        """The CPU backend wraps single elementwise ops in trivial fusions;
+        on the TPU target those fuse away entirely. A fusion is 'free' if
+        its body is pure elementwise/bookkeeping (no dot, reduce, scatter,
+        DUS, ...)."""
+        if comp in fusion_free_memo:
+            return fusion_free_memo[comp]
+        free = True
+        for op in comps.get(comp, []):
+            if op.opcode in _FREE_OPS or op.opcode in _ELEMENTWISE:
+                continue
+            if op.opcode == "fusion":
+                cm = _CALLED.search(op.line)
+                if cm and fusion_is_free(cm.group(1)):
+                    continue
+            free = False
+            break
+        fusion_free_memo[comp] = free
+        return free
+
+    def walk(comp: str) -> CompTotals:
+        if comp in memo:
+            return memo[comp]
+        t = CompTotals()
+        symtab = symtabs.get(comp, {})
+        for op in comps.get(comp, []):
+            code = op.opcode
+            base_kind = code[:-6] if code.endswith("-start") else code
+            if base_kind.endswith("-done") or base_kind.endswith("-update"):
+                continue
+            # ---- collectives ----
+            if base_kind in _COLLECTIVES:
+                _, b = _shape_numel_bytes(op.type_str)
+                t.coll_bytes += b
+                t.coll_by_kind[base_kind] += b
+                t.hbm_bytes += b  # the collective reads/writes HBM too
+                continue
+            # ---- control flow ----
+            if code == "while":
+                trips = 1
+                tm = _TRIP_RE.search(op.line)
+                if tm:
+                    trips = int(tm.group(1))
+                else:
+                    t.unknown_trip_loops += 1
+                called = _CALLED.findall(op.line)
+                for sub in called:          # body + condition
+                    t.add(walk(sub), trips)
+                continue
+            if code == "conditional":
+                bm = _BRANCHES.search(op.line)
+                subs = (re.findall(r"%?([\w.\-]+)", bm.group(1))
+                        if bm else _CALLED.findall(op.line))
+                for sub in subs:
+                    t.add(walk(sub), 1.0)   # upper bound: all branches
+                continue
+            if code == "call":
+                for sub in _CALLED.findall(op.line):
+                    t.add(walk(sub), 1.0)
+                continue
+            # ---- compute / memory ----
+            if code == "fusion":
+                cm = _CALLED.search(op.line)
+                if cm:
+                    t.flops += fusion_flops(cm.group(1))
+                    if fusion_is_free(cm.group(1)):
+                        continue
+                    t.hbm_bytes += fusion_mem_bytes(cm.group(1))
+                    continue
+            elif code == "dot":
+                t.flops += _dot_flops(op, symtab)
+            if code in _FREE_OPS or code in _ELEMENTWISE:
+                continue
+            if code == "dynamic-slice":
+                t.hbm_bytes += 2 * _shape_numel_bytes(op.type_str)[1]
+                continue
+            if code == "dynamic-update-slice" and len(op.operands) >= 2:
+                upd_b = _shape_numel_bytes(symtab.get(op.operands[1], ""))[1]
+                t.hbm_bytes += 2 * upd_b
+                continue
+            _, out_b = _shape_numel_bytes(op.type_str)
+            in_b = 0
+            for o in op.operands:
+                if o in symtab:
+                    _, ib = _shape_numel_bytes(symtab[o])
+                    in_b += ib
+            t.hbm_bytes += out_b + in_b
+        memo[comp] = t
+        return t
+
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    return walk(entry)

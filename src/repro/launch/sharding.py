@@ -1,0 +1,213 @@
+"""Partitioning rules: params / optimizer state / caches / batches.
+
+Policy (v5e-style 2D/3D mesh):
+  * "model" axis = tensor parallel: attention heads & FFN width & vocab
+    & experts (EP);
+  * "data" (x "pod") = data parallel for the batch, and FSDP-style
+    sharding of the complementary param dim (ZeRO: optimizer state
+    shards with the params);
+  * KV caches: batch on data; heads on model when divisible, else the
+    sequence axis (sequence-parallel decode -- GSPMD turns the softmax
+    reductions into cheap scalar-ish all-reduces);
+  * uneven dims are allowed (GSPMD pads) but we prefer clean divisors.
+
+Rules are matched on the flattened parameter path, so they cover every
+architecture in the zoo with one table.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+from repro.models.config import ModelConfig
+
+# (path regex, trailing-dim axes). Params are TP-sharded on "model" only
+# and replicated across data/pod (ZeRO-1: the f32 Adam moments ADD a
+# "data" shard on the complementary dim -- see opt_moment_specs).
+_RULES = [
+    (r"embed/table$",      lambda: ("model", None)),
+    (r"lm_head$",          lambda: (None, "model")),
+    (r"attn/wq$",          lambda: (None, "model")),
+    (r"attn/wk$",          lambda: (None, "model")),
+    (r"attn/wv$",          lambda: (None, "model")),
+    (r"attn/wo$",          lambda: ("model", None)),
+    (r"attn/w_dkv$",       lambda: (None, "model")),
+    (r"attn/w_kpe$",       lambda: (None, None)),
+    (r"attn/w_uk$",        lambda: (None, "model")),
+    (r"attn/w_uv$",        lambda: (None, "model")),
+    (r"attn/wq_full$",     lambda: (None, "model")),
+    (r"cross/wq$",         lambda: (None, "model")),
+    (r"cross/wk$",         lambda: (None, "model")),
+    (r"cross/wv$",         lambda: (None, "model")),
+    (r"cross/wo$",         lambda: ("model", None)),
+    (r"mlp/w_gate$",       lambda: (None, "model")),
+    (r"mlp/w_up$",         lambda: (None, "model")),
+    (r"mlp/w_down$",       lambda: ("model", None)),
+    (r"shared/w_gate$",    lambda: (None, "model")),
+    (r"shared/w_up$",      lambda: (None, "model")),
+    (r"shared/w_down$",    lambda: ("model", None)),
+    (r"moe/router$",       lambda: (None, None)),
+    (r"moe/w_gate$",       lambda: ("model", None, None)),   # (E, D, F)
+    (r"moe/w_up$",         lambda: ("model", None, None)),
+    (r"moe/w_down$",       lambda: ("model", None, None)),   # (E, F, D)
+    (r"ssm/w_in$",         lambda: (None, "model")),
+    (r"ssm/w_out$",        lambda: ("model", None)),
+    (r"rglru/w_x$",        lambda: (None, "model")),
+    (r"rglru/w_gate_out$", lambda: (None, "model")),
+    (r"rglru/w_input_gate$", lambda: (None, "model")),
+    (r"rglru/w_rec_gate$", lambda: (None, "model")),
+    (r"rglru/w_out$",      lambda: ("model", None)),
+]
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+def _even(shape: tuple, axes: list, mesh: Mesh) -> P:
+    """Null out axes that don't divide the dim evenly (jit in_shardings
+    require exact divisibility)."""
+    out = []
+    for dim, ax in zip(shape, axes):
+        if ax is None:
+            out.append(None)
+            continue
+        size = _dp(mesh) if ax == "data" else mesh.shape[ax]
+        ax_t = _dp_axes(mesh) if ax == "data" else ax
+        out.append(ax_t if (dim % size == 0 and dim >= size) else None)
+    return P(*out)
+
+
+def _spec_for(path: str, shape: tuple, mesh: Mesh) -> P:
+    for pat, builder in _RULES:
+        if re.search(pat, path):
+            axes = list(builder())
+            lead = len(shape) - len(axes)
+            return _even(shape, [None] * lead + axes, mesh)
+    return P()                                  # replicate (norms, biases...)
+
+
+def _dp(mesh: Mesh) -> int:
+    n = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        n *= mesh.shape["pod"]
+    return n
+
+
+def _dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def _fsdp_spec(shape: tuple, mesh: Mesh) -> P:
+    """ZeRO-3: shard the largest dim over the whole flattened mesh (or
+    just 'data' if it doesn't divide); everything else replicated.
+    Weights are all-gathered layer-by-layer at use time (bf16), grads
+    reduce-scattered -- the right layout when per-device batch is small
+    and TP activation psums would dominate."""
+    if not shape:
+        return P()
+    full = _dp(mesh) * mesh.shape["model"]
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    axes = [None] * len(shape)
+    dpa = _dp_axes(mesh)
+    both = (dpa + ("model",)) if isinstance(dpa, tuple) else (dpa, "model")
+    for i in order:
+        if shape[i] % full == 0 and shape[i] >= full:
+            axes[i] = both
+            return P(*axes)
+    for i in order:
+        if shape[i] % _dp(mesh) == 0 and shape[i] >= _dp(mesh):
+            axes[i] = dpa
+            return P(*axes)
+    return P()
+
+
+def param_specs(params_shape: Any, mesh: Mesh, layout: str = "tp") -> Any:
+    """PartitionSpec tree for a params (or grads / adam-moment) pytree of
+    ShapeDtypeStructs or arrays. layout: 'tp' (Megatron TP + ZeRO-1) or
+    'fsdp' (ZeRO-3 over the whole mesh, no TP)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    if layout == "fsdp":
+        specs = [_fsdp_spec(v.shape, mesh) for _, v in flat]
+    else:
+        specs = [_spec_for(_path_str(p), v.shape, mesh) for p, v in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(params_shape: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params_shape, mesh))
+
+
+def opt_moment_specs(params_shape: Any, mesh: Mesh) -> Any:
+    """ZeRO-1: Adam moments take the param spec plus a 'data' shard on the
+    first still-replicated dim that divides evenly (so the f32 optimizer
+    state -- 8 bytes/param -- spreads over the whole mesh, not just TP)."""
+    dp = _dp(mesh)
+    dpa = _dp_axes(mesh)
+
+    def add_data(spec: P, shape: tuple) -> P:
+        axes = list(spec) + [None] * (len(shape) - len(spec))
+        for i, (dim, ax) in enumerate(zip(shape, axes)):
+            if ax is None and dim % dp == 0 and dim >= dp:
+                axes[i] = dpa
+                break
+        return P(*axes)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = [add_data(_spec_for(_path_str(p), v.shape, mesh), v.shape)
+             for p, v in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def _cache_spec(path: str, shape: tuple, mesh: Mesh, cfg: ModelConfig) -> P:
+    tp = mesh.shape["model"]
+    nd = len(shape)
+
+    def ax(trailing):
+        return [None] * (nd - len(trailing)) + ["data" if a == "data" else a
+                                                for a in trailing]
+
+    if re.search(r"/(k|v|xk|xv)$", path):
+        # (R, B, Hkv, S, hd): heads on model if they divide, else seq
+        hkv = shape[-3]
+        if hkv % tp == 0 and hkv >= tp:
+            return _even(shape, ax(["data", "model", None, None]), mesh)
+        return _even(shape, ax(["data", None, "model", None]), mesh)
+    if re.search(r"/(ckv|kpe)$", path):
+        # (R, B, S, d): sequence-parallel latent cache
+        return _even(shape, ax(["data", "model", None]), mesh)
+    if re.search(r"/ssm$", path):
+        # (R, B, H, P, N)
+        return _even(shape, ax(["data", "model", None, None]), mesh)
+    if re.search(r"/conv$", path):
+        # (R, B, W-1, C)
+        return _even(shape, ax(["data", None, "model"]), mesh)
+    if re.search(r"/h$", path):
+        # (R, B, w)
+        return _even(shape, ax(["data", "model"]), mesh)
+    return P()
+
+
+def cache_specs(cache_shape: Any, mesh: Mesh, cfg: ModelConfig) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+    specs = [_cache_spec(_path_str(p), v.shape, mesh, cfg) for p, v in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_spec(mesh: Mesh, ndim: int, batch: Optional[int] = None) -> P:
+    """Batch-leading spec; falls back to replicated if B doesn't divide
+    (e.g. the B=1 long-context cells)."""
+    if batch is not None and batch % _dp(mesh) != 0:
+        return P(*([None] * ndim))
+    return P(_dp_axes(mesh), *([None] * (ndim - 1)))

@@ -1,0 +1,12 @@
+from repro.models.config import (BlockKind, MLAConfig, ModelConfig,
+                                 MoEConfig, RGLRUConfig, SSMConfig, Segment,
+                                 count_params, dense_stack)
+from repro.models.transformer import (decode_step, forward, init_cache,
+                                      init_params, loss_fn, prefill)
+
+__all__ = [
+    "BlockKind", "MLAConfig", "ModelConfig", "MoEConfig", "RGLRUConfig",
+    "SSMConfig", "Segment", "count_params", "dense_stack",
+    "decode_step", "forward", "init_cache", "init_params", "loss_fn",
+    "prefill",
+]

@@ -1,0 +1,322 @@
+"""Attention blocks: GQA/MQA, sliding-window, and DeepSeek-style MLA.
+
+Three score-computation paths, chosen by shape/backend:
+  * einsum        -- small sequences, tests
+  * chunked scan  -- pure-jnp online-softmax over KV chunks; bounds live
+                     memory to O(S * chunk) so 32k prefill lowers cleanly
+                     on any backend (this is the XLA/dry-run path)
+  * pallas flash  -- the TPU kernel (ops.flash_attention)
+
+KV cache layouts:
+  GQA:  {"k": (B, Hkv, Smax, hd), "v": ...}      updated at `pos`
+  MLA:  {"ckv": (B, Smax, kv_lora), "kpe": (B, Smax, rope_dim)}
+        (the latent cache is MLA's point: 576 vs 2*H*hd floats per pos)
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, he_init
+
+CHUNK = 1024
+_EINSUM_MAX_S = 2048
+
+
+# ---------------------------------------------------------------------------
+# Score paths
+# ---------------------------------------------------------------------------
+
+def _einsum_attn(q, k, v, causal, window, q_offset):
+    """q: (B,H,Sq,hd); k,v: (B,Hkv,Sk,hd) -- exact, materialises scores.
+
+    K/V stay in their storage dtype with f32 MXU accumulation
+    (preferred_element_type): a naive .astype(f32) on the cache wrote an
+    f32 COPY of the whole KV cache per layer per decode step -- measured
+    as ~80% of the decode-cell memory roofline term.
+    """
+    B, H, Sq, hd = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    group = H // Hkv
+    qg = (q.astype(jnp.float32) / math.sqrt(hd)).astype(k.dtype)
+    qg = qg.reshape(B, Hkv, group, Sq, hd)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32)
+    rows = q_offset + jnp.arange(Sq)[:, None]
+    cols = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= rows >= cols
+    if window is not None:
+        mask &= rows - cols < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", w.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, H, Sq, v.shape[-1]).astype(q.dtype)
+
+
+def _chunked_attn(q, k, v, causal, window, q_offset):
+    """Online-softmax over KV chunks via lax.scan; O(Sq*chunk) live."""
+    B, H, Sq, hd = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    group = H // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    nchunks = (Sk + CHUNK - 1) // CHUNK
+    Skp = nchunks * CHUNK
+    if Skp != Sk:
+        pad = [(0, 0), (0, 0), (0, Skp - Sk), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    kc = k.reshape(B, Hkv, nchunks, CHUNK, hd).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, Hkv, nchunks, CHUNK, dv).transpose(2, 0, 1, 3, 4)
+    qg = (q.astype(jnp.float32) * scale).reshape(B, Hkv, group, Sq, hd)
+    rows = q_offset + jnp.arange(Sq)                      # (Sq,)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        ci, kb, vb = inp
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kb.astype(jnp.float32))
+        cols = ci * CHUNK + jnp.arange(CHUNK)
+        mask = cols[None, :] < Sk
+        if causal:
+            mask &= rows[:, None] >= cols[None, :]
+        if window is not None:
+            mask &= rows[:, None] - cols[None, :] < window
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(-1, keepdims=True)
+        acc = acc * corr + jnp.einsum("bhgqk,bhkd->bhgqd", p,
+                                      vb.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Hkv, group, Sq, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, group, Sq, 1), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, group, Sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (jnp.arange(nchunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.reshape(B, H, Sq, dv).astype(q.dtype)
+
+
+def sdpa(q, k, v, *, causal=True, window=None, q_offset=0,
+         use_kernel=False):
+    """Dispatching scaled-dot-product attention."""
+    Sk = k.shape[2]
+    Sq = q.shape[2]
+    if use_kernel and window is None and q_offset == 0:
+        return ops.flash_attention(q, k, v, causal=causal)
+    if Sq == 1 or Sk <= _EINSUM_MAX_S:
+        # decode / short context: exact einsum (scores are small)
+        return _einsum_attn(q, k, v, causal, window, q_offset)
+    if window is None and q_offset == 0:
+        # long-context train/prefill: custom-vjp flash (XLA path) --
+        # saves only (out, lse); backward recomputes scores blockwise
+        from repro.models.flash_xla import flash_attention_xla
+        return flash_attention_xla(q, k, v, causal)
+    return _chunked_attn(q, k, v, causal, window, q_offset)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig):
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": he_init(ks[0], (d, H * hd), cfg.pdtype),
+        "wk": he_init(ks[1], (d, Hkv * hd), cfg.pdtype),
+        "wv": he_init(ks[2], (d, Hkv * hd), cfg.pdtype),
+        "wo": he_init(ks[3], (H * hd, d), cfg.pdtype, fan_in=H * hd),
+    }
+
+
+def attention(p, cfg: ModelConfig, x, *, pos0=0, cache=None, window=None,
+              causal=True, use_kernel=False):
+    """x: (B, S, d). cache: None (full-seq) or dict with k/v (B,Hkv,Smax,hd)
+    to read+update at positions [pos0, pos0+S). Returns (out, new_cache)."""
+    B, S, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = (x @ p["wk"]).reshape(B, S, Hkv, hd).transpose(0, 2, 1, 3)
+    v = (x @ p["wv"]).reshape(B, S, Hkv, hd).transpose(0, 2, 1, 3)
+    pos = pos0 + jnp.arange(S)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+
+    if cache is not None:
+        if S == 1:
+            # decode: read the cache, fold the new token into the softmax
+            # as an explicit extra term, and emit only the tiny k/v delta
+            # -- the full cache never round-trips through the layer body
+            # (lax.scan would copy the whole shard per layer otherwise)
+            out = _decode_attn_delta(q, cache["k"], cache["v"], k, v,
+                                     pos0, window)
+            new_cache = {"k@delta": k.astype(cache["k"].dtype),
+                         "v@delta": v.astype(cache["v"].dtype)}
+        else:
+            kc = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, pos0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, pos0, 0))
+            new_cache = {"k": kc, "v": vc}
+            out = sdpa(q, kc, vc, causal=causal, window=window,
+                       q_offset=pos0, use_kernel=False)
+    else:
+        new_cache = None
+        out = sdpa(q, k, v, causal=causal, window=window,
+                   use_kernel=use_kernel)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    return out @ p["wo"], new_cache
+
+
+def _decode_attn_delta(q, cache_k, cache_v, k_new, v_new, pos0, window):
+    """One-token attention over cache rows < pos0 plus the new (k, v):
+    exact online-softmax merge. q: (B,H,1,hd); cache: (B,Hkv,S,dh)."""
+    B, H, _, hd = q.shape
+    Hkv, Sk = cache_k.shape[1], cache_k.shape[2]
+    g = H // Hkv
+    qg = ((q.astype(jnp.float32) / math.sqrt(hd))
+          .astype(cache_k.dtype).reshape(B, Hkv, g, 1, hd))
+    s_c = jnp.einsum("bhgqd,bhkd->bhgqk", qg, cache_k,
+                     preferred_element_type=jnp.float32)   # (B,Hkv,g,1,S)
+    cols = jnp.arange(Sk)
+    mask = cols < pos0
+    if window is not None:
+        mask &= (pos0 - cols) < window
+    s_c = jnp.where(mask[None, None, None, None, :], s_c, -1e30)
+    s_n = jnp.einsum("bhgqd,bhkd->bhgqk", qg,
+                     k_new.astype(cache_k.dtype),
+                     preferred_element_type=jnp.float32)   # (B,Hkv,g,1,1)
+    m = jnp.maximum(s_c.max(-1, keepdims=True), s_n)
+    w_c = jnp.exp(s_c - m)
+    w_n = jnp.exp(s_n - m)
+    denom = w_c.sum(-1, keepdims=True) + w_n
+    o = (jnp.einsum("bhgqk,bhkd->bhgqd", w_c.astype(cache_v.dtype),
+                    cache_v, preferred_element_type=jnp.float32)
+         + w_n * v_new.astype(jnp.float32).reshape(B, Hkv, 1, 1, -1))
+    o = o / denom
+    return o.reshape(B, H, 1, -1).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig):
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qd = m.nope_dim + m.rope_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "w_dkv": he_init(ks[0], (d, m.kv_lora), cfg.pdtype),
+        "w_kpe": he_init(ks[1], (d, m.rope_dim), cfg.pdtype),
+        "w_uk": he_init(ks[2], (m.kv_lora, H * m.nope_dim), cfg.pdtype,
+                        fan_in=m.kv_lora),
+        "w_uv": he_init(ks[3], (m.kv_lora, H * m.v_dim), cfg.pdtype,
+                        fan_in=m.kv_lora),
+        "wq": he_init(ks[4], (d, H * qd), cfg.pdtype),
+        "wo": he_init(ks[5], (H * m.v_dim, d), cfg.pdtype,
+                      fan_in=H * m.v_dim),
+    }
+
+
+def mla_attention(p, cfg: ModelConfig, x, *, pos0=0, cache=None,
+                  use_kernel=False):
+    """Latent-cache attention. cache: {"ckv": (B,Smax,kv_lora),
+    "kpe": (B,Smax,rope_dim)}."""
+    m = cfg.mla
+    B, S, d = x.shape
+    H = cfg.n_heads
+    qd = m.nope_dim + m.rope_dim
+    pos = pos0 + jnp.arange(S)
+
+    ckv = x @ p["w_dkv"]                                   # (B,S,lora)
+    kpe = apply_rope((x @ p["w_kpe"])[:, None], pos,
+                     cfg.rope_theta)[:, 0]                 # (B,S,rope)
+    q = (x @ p["wq"]).reshape(B, S, H, qd).transpose(0, 2, 1, 3)
+    q_nope, q_pe = q[..., :m.nope_dim], q[..., m.nope_dim:]
+    q_pe = apply_rope(q_pe, pos, cfg.rope_theta)
+
+    if cache is not None:
+        if S == 1:
+            # absorbed-matmul decode: score and value-read directly in the
+            # 512-d latent space -- never expands the per-head K/V cache,
+            # and the cache itself never round-trips through the layer
+            # body (only the one-token latent delta is emitted)
+            out = _mla_absorbed_decode(p, cfg, q_nope, q_pe,
+                                       cache["ckv"], cache["kpe"],
+                                       ckv, kpe, pos0)
+            new_cache = {"ckv@delta": ckv.astype(cache["ckv"].dtype),
+                         "kpe@delta": kpe.astype(cache["kpe"].dtype)}
+            return out @ p["wo"], new_cache
+        ckv_all = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, pos0, 0))
+        kpe_all = jax.lax.dynamic_update_slice(
+            cache["kpe"], kpe.astype(cache["kpe"].dtype), (0, pos0, 0))
+        new_cache = {"ckv": ckv_all, "kpe": kpe_all}
+    else:
+        ckv_all, kpe_all = ckv, kpe
+        new_cache = None
+
+    Sk = ckv_all.shape[1]
+    k_nope = (ckv_all @ p["w_uk"]).reshape(B, Sk, H, m.nope_dim)
+    vv = (ckv_all @ p["w_uv"]).reshape(B, Sk, H, m.v_dim)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kpe_all[:, :, None],
+                                  (B, Sk, H, m.rope_dim))], -1)
+    k = k.transpose(0, 2, 1, 3)                            # (B,H,Sk,qd)
+    vv = vv.transpose(0, 2, 1, 3)
+    qfull = jnp.concatenate([q_nope, q_pe], -1)
+    out = sdpa(qfull, k, vv, causal=True, q_offset=pos0,
+               use_kernel=use_kernel and cache is None)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, H * m.v_dim)
+    return out @ p["wo"], new_cache
+
+
+def _mla_absorbed_decode(p, cfg: ModelConfig, q_nope, q_pe, ckv_cache,
+                         kpe_cache, ckv_new, kpe_new, pos0):
+    """One-token MLA decode with W_uk/W_uv absorbed into the query/output:
+    scores and value reads happen in the kv_lora latent space (cache never
+    expanded to per-head K/V), and the new token enters the softmax as an
+    explicit extra term (cache rows >= pos0 are masked out).
+    Returns (B, 1, H*v_dim)."""
+    m = cfg.mla
+    B, H = q_nope.shape[0], cfg.n_heads
+    scale = 1.0 / math.sqrt(m.nope_dim + m.rope_dim)
+    cdt = ckv_cache.dtype
+    w_uk = p["w_uk"].reshape(m.kv_lora, H, m.nope_dim)
+    # q' = q_nope absorbed through W_uk^T: (B,H,1,lora)
+    q_lat = jnp.einsum("bhsn,lhn->bhsl", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32)).astype(cdt)
+    q_pe_c = q_pe.astype(cdt)
+    s = (jnp.einsum("bhsl,btl->bhst", q_lat, ckv_cache,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bhsr,btr->bhst", q_pe_c, kpe_cache,
+                      preferred_element_type=jnp.float32)) * scale
+    t = jnp.arange(ckv_cache.shape[1])
+    s = jnp.where((t < pos0)[None, None, None, :], s, -1e30)
+    s_n = (jnp.einsum("bhsl,btl->bhst", q_lat, ckv_new.astype(cdt),
+                      preferred_element_type=jnp.float32)
+           + jnp.einsum("bhsr,btr->bhst", q_pe_c, kpe_new.astype(cdt),
+                        preferred_element_type=jnp.float32)) * scale
+    mx = jnp.maximum(s.max(-1, keepdims=True), s_n)
+    w_c = jnp.exp(s - mx)
+    w_n = jnp.exp(s_n - mx)
+    denom = w_c.sum(-1, keepdims=True) + w_n
+    o_lat = (jnp.einsum("bhst,btl->bhsl", w_c.astype(cdt), ckv_cache,
+                        preferred_element_type=jnp.float32)
+             + w_n * ckv_new.astype(jnp.float32)[:, None])  # (B,H,1,lora)
+    o_lat = o_lat / denom
+    w_uv = p["w_uv"].reshape(m.kv_lora, H, m.v_dim)
+    o = jnp.einsum("bhsl,lhv->bhsv", o_lat, w_uv.astype(jnp.float32))
+    return o.transpose(0, 2, 1, 3).reshape(B, 1, H * m.v_dim).astype(cdt)

@@ -1,0 +1,140 @@
+"""Flash attention for the XLA (non-Pallas) path, as a custom_vjp.
+
+Plain jnp attention under jax.grad stashes ~8 score-sized f32 tensors per
+layer (fwd exp + masks + remat recompute + backward dS/dP) -- measured as
+the dominant HBM-roofline term on every dense train/prefill cell. This
+implementation saves only (out, m, l) and recomputes scores blockwise in
+the backward (the standard flash recipe), cutting score-sized traffic
+~2-4x while keeping everything lowerable on any backend (the dry-run
+compiles it; the Pallas kernel replaces it on real TPU runs).
+
+Supports GQA (Hkv | H) and causal masking; sequence padded to the chunk
+size internally.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+CHUNK = 1024
+
+
+def _pad_kv(k, v, chunk):
+    Sk = k.shape[2]
+    nc = (Sk + chunk - 1) // chunk
+    pad = nc * chunk - Sk
+    if pad:
+        widths = [(0, 0), (0, 0), (0, pad), (0, 0)]
+        k = jnp.pad(k, widths)
+        v = jnp.pad(v, widths)
+    return k, v, nc
+
+
+def _mask(s, rows, cols_base, chunk, Sk, causal):
+    cols = cols_base + jnp.arange(chunk)
+    m = cols[None, :] < Sk
+    if causal:
+        m = m & (rows[:, None] >= cols[None, :])
+    return jnp.where(m[None, None, None], s, -1e30)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention_xla(q, k, v, causal: bool = True,
+                        scale: float | None = None):
+    out, _ = _fwd(q, k, v, causal, scale)
+    return out
+
+
+def _fwd(q, k, v, causal, scale):
+    B, H, Sq, dh = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    dv_dim = v.shape[-1]                 # MLA: v dim can differ from q/k
+    g = H // Hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(dh)
+    kp, vp, nc = _pad_kv(k, v, CHUNK)
+    kc = kp.reshape(B, Hkv, nc, CHUNK, dh).transpose(2, 0, 1, 3, 4)
+    vc = vp.reshape(B, Hkv, nc, CHUNK, dv_dim).transpose(2, 0, 1, 3, 4)
+    qg = (q.astype(jnp.float32) * scale).reshape(B, Hkv, g, Sq, dh)
+    rows = jnp.arange(Sq)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        ci, kb, vb = inp
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kb.astype(jnp.float32))
+        s = _mask(s, rows, ci * CHUNK, CHUNK, Sk, causal)
+        m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(-1, keepdims=True)
+        # p in the model dtype for the PV matmul: halves score-class HBM
+        # traffic for bf16 models; f32 models (tests) stay exact
+        acc = acc * corr + jnp.einsum("bhgqk,bhkd->bhgqd",
+                                      p.astype(v.dtype),
+                                      vb).astype(jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Hkv, g, Sq, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, g, Sq, 1), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, g, Sq, dv_dim), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (jnp.arange(nc), kc, vc))
+    l = jnp.maximum(l, 1e-30)
+    out = (acc / l).reshape(B, H, Sq, dv_dim).astype(q.dtype)
+    lse = (m + jnp.log(l))                      # (B,Hkv,g,Sq,1)
+    return out, (q, k, v, out, lse)
+
+
+def _fwd_vjp(q, k, v, causal, scale):
+    out, res = _fwd(q, k, v, causal, scale)
+    return out, res
+
+
+def _bwd_vjp(causal, scale, res, dout):
+    q, k, v, out, lse = res
+    B, H, Sq, dh = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    dv_dim = v.shape[-1]
+    g = H // Hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(dh)
+    kp, vp, nc = _pad_kv(k, v, CHUNK)
+    kc = kp.reshape(B, Hkv, nc, CHUNK, dh).transpose(2, 0, 1, 3, 4)
+    vc = vp.reshape(B, Hkv, nc, CHUNK, dv_dim).transpose(2, 0, 1, 3, 4)
+    qg = (q.astype(jnp.float32) * scale).reshape(B, Hkv, g, Sq, dh)
+    dog = dout.astype(jnp.float32).reshape(B, Hkv, g, Sq, dv_dim)
+    og = out.astype(jnp.float32).reshape(B, Hkv, g, Sq, dv_dim)
+    # D_i = sum_d dO_i O_i  (flash-2 backward)
+    delta = jnp.sum(dog * og, axis=-1, keepdims=True)   # (B,Hkv,g,Sq,1)
+    rows = jnp.arange(Sq)
+
+    def step(dq_acc, inp):
+        ci, kb, vb = inp
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kb.astype(jnp.float32))
+        s = _mask(s, rows, ci * CHUNK, CHUNK, Sk, causal)
+        p = jnp.exp(s - lse).astype(v.dtype)              # (B,Hkv,g,Sq,K)
+        dp = jnp.einsum("bhgqd,bhkd->bhgqk", dog, vb.astype(jnp.float32))
+        ds = (p.astype(jnp.float32) * (dp - delta)).astype(k.dtype)
+        dv_c = jnp.einsum("bhgqk,bhgqd->bhkd", p.astype(jnp.float32), dog)
+        dk_c = jnp.einsum("bhgqk,bhgqd->bhkd", ds.astype(jnp.float32),
+                          qg)                             # qg carries scale
+        dq_acc = dq_acc + jnp.einsum("bhgqk,bhkd->bhgqd",
+                                     ds.astype(jnp.float32),
+                                     kb.astype(jnp.float32))
+        return dq_acc, (dk_c, dv_c)
+
+    dq0 = jnp.zeros((B, Hkv, g, Sq, dh), jnp.float32)
+    dq, (dk_c, dv_c) = jax.lax.scan(step, dq0,
+                                    (jnp.arange(nc), kc, vc))
+    dq = (dq * scale).reshape(B, H, Sq, dh).astype(q.dtype)
+    dk = dk_c.transpose(1, 2, 0, 3, 4).reshape(B, Hkv, nc * CHUNK, dh)
+    dv = dv_c.transpose(1, 2, 0, 3, 4).reshape(B, Hkv, nc * CHUNK, dv_dim)
+    dk = dk[:, :, :Sk].astype(k.dtype)
+    dv = dv[:, :, :Sk].astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention_xla.defvjp(_fwd_vjp, _bwd_vjp)

@@ -1,0 +1,139 @@
+"""Shared model layers: norms, RoPE, MLPs, embeddings. Plain-pytree params
+(nested dicts), functional apply -- no framework dependency."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def he_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in or shape[0]
+    return (jax.random.normal(key, shape) / math.sqrt(fan_in)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(key, d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, hd); pos: (S,) or broadcastable int positions."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = pos.astype(jnp.float32)[..., :, None] * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d, f, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": he_init(k1, (d, f), dtype),
+        "w_up": he_init(k2, (d, f), dtype),
+        "w_down": he_init(k3, (f, d), dtype, fan_in=f),
+    }
+
+
+def mlp(p, x, act: str):
+    g = x @ p["w_gate"]
+    u = x @ p["w_up"]
+    h = (jax.nn.silu(g) if act == "silu" else
+         jax.nn.gelu(g, approximate=True)) * u
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(key, vocab_padded, d, dtype):
+    return {"table": (jax.random.normal(key, (vocab_padded, d)) * 0.02
+                      ).astype(dtype)}
+
+
+def embed(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p_head, x, softcap: float = 0.0):
+    logits = (x @ p_head).astype(jnp.float32)
+    if softcap > 0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logits
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  vocab: int) -> jax.Array:
+    """Mean CE over all positions, written sharding-friendly: the label
+    logit is extracted with a masked reduction over the (model-sharded)
+    vocab axis instead of a gather -- GSPMD lowers both the logsumexp and
+    the mask-reduce to per-shard reductions plus tiny all-reduces, so the
+    (B, S, V) tensor never gets replicated or gathered."""
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    shifted = lf - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    vocab_ids = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    label_logit = jnp.sum(
+        jnp.where(vocab_ids == labels[..., None], shifted, 0.0), axis=-1)
+    return jnp.mean(lse - label_logit)
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise short conv (Mamba / RG-LRU frontends)
+# ---------------------------------------------------------------------------
+
+def init_conv1d(key, channels, width, dtype):
+    return {"w": he_init(key, (width, channels), dtype, fan_in=width),
+            "b": jnp.zeros((channels,), dtype)}
+
+
+def causal_conv1d(p, x, state: Optional[jax.Array] = None):
+    """x: (B, S, C) depthwise causal conv of width W.
+
+    state: (B, W-1, C) trailing context from previous steps (decode), or
+    None for zero left-padding (prefill/training).
+    Returns (y, new_state).
+    """
+    w = p["w"].astype(jnp.float32)           # (W, C)
+    W = w.shape[0]
+    B, S, C = x.shape
+    xf = x.astype(jnp.float32)
+    if state is None:
+        state = jnp.zeros((B, W - 1, C), jnp.float32)
+    xp = jnp.concatenate([state.astype(jnp.float32), xf], axis=1)
+    # y_t = sum_i w_i * x_{t-W+1+i}
+    y = jnp.zeros((B, S, C), jnp.float32)
+    for i in range(W):
+        y = y + w[i] * jax.lax.dynamic_slice_in_dim(xp, i, S, axis=1)
+    y = y + p["b"].astype(jnp.float32)
+    new_state = xp[:, -(W - 1):, :] if W > 1 else state
+    return y.astype(x.dtype), new_state.astype(x.dtype)

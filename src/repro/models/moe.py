@@ -1,0 +1,123 @@
+"""Mixture-of-Experts MLP with static-shape sort-based dispatch.
+
+Dispatch is the same fixed-capacity scatter pattern as the LSH router in
+core/index.py (tokens -> expert slots instead of (Key,Value) rows ->
+machines): rank-within-expert via argsort, capacity-capped slots, masked
+scatter, compute, weighted gather-combine. All shapes static => lowers
+under pjit with experts sharded on the "model" axis (EP); XLA inserts the
+token all_to_all from the sharding constraints.
+
+Dropped-token policy: over-capacity tokens fall back to the residual path
+(standard GShard behaviour); aux load-balance loss discourages it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import he_init, mlp, init_mlp
+from repro.models import pspec
+
+
+def init_moe(key, cfg: ModelConfig):
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    params = {
+        "router": he_init(ks[0], (d, m.n_experts), jnp.float32),
+        "w_gate": he_init(ks[1], (m.n_experts, d, m.d_ff_expert), cfg.pdtype),
+        "w_up": he_init(ks[2], (m.n_experts, d, m.d_ff_expert), cfg.pdtype),
+        "w_down": he_init(ks[3], (m.n_experts, m.d_ff_expert, d), cfg.pdtype,
+                          fan_in=m.d_ff_expert),
+    }
+    if m.n_shared:
+        params["shared"] = init_mlp(
+            ks[4], d, m.d_ff_shared or m.d_ff_expert * m.n_shared, cfg.pdtype)
+    return params
+
+
+def moe_mlp(p, cfg: ModelConfig, x):
+    """x: (B, S, d) -> (out, aux_loss).
+
+    Grouped EP dispatch: tokens are split into G groups (G = data-parallel
+    shards when running distributed), routing/scatter/gather run LOCALLY
+    within each group, and the only cross-device movement is the
+    (G:data -> E:model) reshard of the compact (G, E, C_g, d) buffer --
+    which GSPMD lowers as the expert-parallel token all_to_all. The naive
+    single-buffer form lowered the scatter as a full-buffer all-reduce
+    per layer (measured 860 GB/device on the deepseek train cell).
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, K = m.n_experts, m.top_k
+    G = pspec.dp() if T % max(pspec.dp(), 1) == 0 else 1
+    G = max(G, 1)
+    Tg = T // G
+    xf = x.reshape(T, d)
+    xg = x.reshape(G, Tg, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])        # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, K)                 # (T, K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (Switch): E * sum_e f_e * p_e
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(
+        1.0 / (T * K))
+    aux = E * jnp.sum(me * ce)
+
+    # ---- per-group static-capacity dispatch (local to each shard) ----
+    C = int(m.capacity_factor * Tg * K / E) + 1
+    eg = top_e.reshape(G, Tg * K)                          # (G, Tg*K)
+
+    def group_slots(e_row):
+        order = jnp.argsort(e_row)
+        esorted = e_row[order]
+        starts = jnp.searchsorted(esorted, jnp.arange(E))
+        rank_sorted = jnp.arange(Tg * K) - starts[esorted]
+        rank = jnp.zeros((Tg * K,), jnp.int32).at[order].set(
+            rank_sorted.astype(jnp.int32))
+        keep = rank < C
+        slot = jnp.where(keep, e_row * C + rank, E * C)    # sink slot
+        return slot, keep
+
+    slot, keep = jax.vmap(group_slots)(eg)                 # (G, Tg*K)
+
+    tok_of = jnp.tile(jnp.repeat(jnp.arange(Tg), K)[None], (G, 1))
+    rows = jnp.take_along_axis(xg, tok_of[..., None], axis=1)
+    rows = jnp.where(keep[..., None], rows, 0).astype(cfg.cdtype)
+    buf = jnp.zeros((G, E * C + 1, d), cfg.cdtype)
+    buf = jax.vmap(lambda b, s, r: b.at[s].set(r))(buf, slot, rows)
+    buf = pspec.moe_group_local(buf[:, :-1].reshape(G, E, C, d))
+
+    # ---- EP all_to_all boundary: groups -> experts ----
+    buf = pspec.moe_group_expert(buf)
+
+    # ---- expert compute (E on the model axis) ----
+    act = jax.nn.silu if cfg.act == "silu" else (
+        lambda v: jax.nn.gelu(v, approximate=True))
+    h = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"])
+    u = jnp.einsum("gecd,edf->gecf", buf, p["w_up"])
+    out = jnp.einsum("gecf,efd->gecd", act(h) * u, p["w_down"])
+    out = pspec.moe_group_expert(out)
+
+    # ---- all_to_all back, then local combine ----
+    # no scatter needed: token t's K expert outputs sit at its K slots;
+    # gather them and sum over the K axis (scatter-add lowered as a full
+    # all-reduce under GSPMD -- measured 223 GB/device on deepseek)
+    out = pspec.moe_group_local(out)
+    out_flat = out.reshape(G, E * C, d)
+    safe_slot = jnp.minimum(slot, E * C - 1)
+    gathered = jnp.take_along_axis(out_flat, safe_slot[..., None], axis=1)
+    gathered = jnp.where(keep[..., None], gathered, 0)
+    gathered = pspec.moe_group_local(gathered)
+    w_flat = top_w.reshape(G, Tg * K)[..., None].astype(gathered.dtype)
+    y = (gathered * w_flat).reshape(G, Tg, K, d).sum(axis=2)
+    y = y.reshape(T, d)
+
+    if "shared" in p:
+        y = y + mlp(p["shared"], xf, cfg.act)
+    return y.reshape(B, S, d).astype(x.dtype), aux

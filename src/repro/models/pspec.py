@@ -1,0 +1,112 @@
+"""Activation sharding constraints, context-configured.
+
+The launch layer calls set_axes() before tracing; models then pin the
+batch axis of activations (and the vocab axis of logits) so GSPMD never
+trades batch sharding away for a param-aligned resharding (which
+replicates activations and blows temp memory -- observed on the 7B
+train_4k cell). Outside a configured context every constraint is a no-op,
+so tests and single-device paths are unaffected. Dims that don't divide
+their axis evenly are left unconstrained.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_BATCH_AXES: Optional[tuple] = None
+_MODEL_AXIS: Optional[str] = None
+_DP = 1
+_TP = 1
+_SEQ_SHARD = False
+
+
+def set_axes(batch_axes: Optional[tuple], model_axis: Optional[str],
+             dp: int = 1, tp: int = 1, seq_shard: bool = False):
+    """batch_axes: mesh axes for the batch dim (None = replicated/unset).
+
+    seq_shard: Megatron-style sequence parallelism -- the residual stream
+    between blocks is sharded (batch, S/tp, d). GSPMD then lowers the TP
+    matmul reductions as bf16 reduce-scatter + all-gather pairs instead
+    of full f32 all-reduces, and the per-layer remat stash shards tp-ways.
+    """
+    global _BATCH_AXES, _MODEL_AXIS, _DP, _TP, _SEQ_SHARD
+    _BATCH_AXES = batch_axes
+    _MODEL_AXIS = model_axis
+    _DP, _TP = dp, tp
+    _SEQ_SHARD = seq_shard
+
+
+def clear():
+    set_axes(None, None, 1, 1)
+
+
+def active() -> bool:
+    return _MODEL_AXIS is not None or _BATCH_AXES is not None
+
+
+def _spec(x, axes_per_dim):
+    """Build a spec, dropping axes that don't divide the dim."""
+    out = []
+    for dim, ax in zip(x.shape, axes_per_dim):
+        if ax is None:
+            out.append(None)
+            continue
+        size = _DP if ax == "__batch__" else _TP
+        name = _BATCH_AXES if ax == "__batch__" else _MODEL_AXIS
+        if name is None or dim % size != 0 or dim < size:
+            out.append(None)
+        else:
+            out.append(name)
+    return P(*out)
+
+
+def _constrain(x, axes_per_dim):
+    if not active():
+        return x
+    spec = _spec(x, axes_per_dim)
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def batch_nd(x):
+    """(B, ..., d): batch on data axes; with seq_shard also S on model."""
+    if _SEQ_SHARD and x.ndim == 3:
+        return _constrain(x, ["__batch__", "__model__", None])
+    return _constrain(x, ["__batch__"] + [None] * (x.ndim - 1))
+
+
+def logits(x):
+    """(B, S, V): vocab on the model axis."""
+    return _constrain(x, ["__batch__", None, "__model__"])
+
+
+def expert_buf(x):
+    """(E, C, d): experts on the model axis."""
+    return _constrain(x, ["__model__"] + [None] * (x.ndim - 1))
+
+
+def dp() -> int:
+    return _DP if _BATCH_AXES is not None else 1
+
+
+def moe_group_local(x):
+    """(G, E, C, d): groups on the data axes (scatter stays shard-local)."""
+    return _constrain(x, ["__batch__"] + [None] * (x.ndim - 1))
+
+
+def moe_group_expert(x):
+    """(G, E, C, d): groups STAY on data, experts shard on model -- the
+    (G:data, E:*) -> (G:data, E:model) reshard is an all_to_all along the
+    model axis only (each data rank redistributes its own buffer among
+    its TP peers; pods never exchange). Dropping G's sharding here
+    replicated the buffer dp-ways -- measured 8x step-time regression on
+    the multi-pod MoE cells."""
+    return _constrain(x, ["__batch__", "__model__"] + [None] * (x.ndim - 2))
+
+
+def heads4(x):
+    """(B, H, S, hd): attention heads on the model axis."""
+    return _constrain(x, ["__batch__", "__model__", None, None])

@@ -1,0 +1,88 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+  a_t = exp(-c * softplus(Lambda) * sigmoid(r_t)),   c = 8
+
+Prefill/training uses an associative scan (log-depth, XLA-friendly);
+decode carries h (B, W) -- O(1) per token, so 500k contexts are cheap.
+The block = conv1d frontend + RG-LRU + gated output, as in Griffin.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import causal_conv1d, he_init, init_conv1d
+
+_C = 8.0
+
+
+def _width(cfg: ModelConfig) -> int:
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+def init_rglru(key, cfg: ModelConfig):
+    w = _width(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": he_init(ks[0], (cfg.d_model, w), cfg.pdtype),
+        "w_gate_out": he_init(ks[1], (cfg.d_model, w), cfg.pdtype),
+        "conv": init_conv1d(ks[2], w, cfg.rglru.d_conv, cfg.pdtype),
+        "w_input_gate": he_init(ks[3], (w, w), cfg.pdtype, fan_in=w),
+        "w_rec_gate": he_init(ks[4], (w, w), cfg.pdtype, fan_in=w),
+        # Lambda init so a^c in (0.9, 0.999) as in the paper
+        "lam": jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, w)) / _C)).astype(jnp.float32),
+        "w_out": he_init(ks[5], (w, cfg.d_model), cfg.pdtype, fan_in=w),
+    }
+
+
+def rglru_block(p, cfg: ModelConfig, xin, *, state=None):
+    """xin: (B, S, d). state: None or {"conv": (B,W-1,w), "h": (B,w)}.
+    Returns (out, new_state)."""
+    B, S, _ = xin.shape
+    w = _width(cfg)
+    x = xin @ p["w_x"]                                   # (B,S,w)
+    gate_out = jax.nn.gelu((xin @ p["w_gate_out"]).astype(jnp.float32),
+                           approximate=True)
+    conv_state = None if state is None else state["conv"]
+    x, new_conv = causal_conv1d(p["conv"], x, conv_state)
+
+    xf = x.astype(jnp.float32)
+    i_t = jax.nn.sigmoid(xf @ p["w_input_gate"].astype(jnp.float32))
+    r_t = jax.nn.sigmoid(xf @ p["w_rec_gate"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r_t        # (B,S,w), <= 0
+    a = jnp.exp(log_a)
+    gated_x = i_t * xf * jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+
+    if state is None:
+        h0 = jnp.zeros((B, w), jnp.float32)
+    else:
+        h0 = state["h"].astype(jnp.float32)
+
+    # associative scan over  h_t = a_t h_{t-1} + b_t
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, br + ar * bl
+
+    a_seq = jnp.moveaxis(a, 1, 0)                        # (S,B,w)
+    b_seq = jnp.moveaxis(gated_x, 1, 0)
+    # fold initial state into the first element
+    b_seq = b_seq.at[0].add(a_seq[0] * h0)
+    a_cum, h_seq = jax.lax.associative_scan(comb, (a_seq, b_seq), axis=0)
+    h = jnp.moveaxis(h_seq, 0, 1)                        # (B,S,w)
+
+    out = (h * gate_out).astype(xin.dtype) @ p["w_out"]
+    new_state = None if state is None else {
+        "conv": new_conv, "h": h[:, -1].astype(jnp.float32)}
+    return out, new_state
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int):
+    w = _width(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.rglru.d_conv - 1, w), cfg.cdtype),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }

@@ -1,0 +1,112 @@
+"""Mamba-2 block (SSD): in-proj -> causal conv -> SSD scan -> gated norm ->
+out-proj. Prefill/training uses the chunked SSD (Pallas kernel on TPU,
+jnp oracle elsewhere); decode carries (conv_state, ssm_state) and costs
+O(1) per token -- this is what makes the 500k-context cells tractable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.models.config import ModelConfig
+from repro.models.layers import causal_conv1d, he_init, init_conv1d
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return s, d_inner, n_heads
+
+
+def init_ssm(key, cfg: ModelConfig):
+    s, d_inner, H = _dims(cfg)
+    conv_ch = d_inner + 2 * s.n_groups * s.d_state
+    ks = jax.random.split(key, 6)
+    return {
+        # projects to [z (gate), x, B, C, dt]
+        "w_in": he_init(ks[0], (cfg.d_model,
+                                2 * d_inner + 2 * s.n_groups * s.d_state + H),
+                        cfg.pdtype),
+        "conv": init_conv1d(ks[1], conv_ch, s.d_conv, cfg.pdtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), cfg.pdtype),
+        "w_out": he_init(ks[2], (d_inner, cfg.d_model), cfg.pdtype,
+                         fan_in=d_inner),
+    }
+
+
+def ssm_block(p, cfg: ModelConfig, xin, *, state=None, use_kernel=False):
+    """xin: (B, S, d). state: None or {"conv": (B,W-1,ch), "ssm": (B,H,P,N)}.
+    Returns (out, new_state)."""
+    s, d_inner, H = _dims(cfg)
+    B, S, _ = xin.shape
+    G, N, P = s.n_groups, s.d_state, s.head_dim
+
+    zxbcdt = xin @ p["w_in"]
+    z, xbc, dt_raw = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner + 2 * G * N], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    xbc, new_conv = causal_conv1d(p["conv"], xbc, conv_state)
+    xbc = jax.nn.silu(xbc)
+    x, b, c = jnp.split(xbc, [d_inner, d_inner + G * N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"])                    # (B,S,H)
+
+    xh = x.reshape(B, S, H, P)
+    bh = b.reshape(B, S, G, N)
+    ch = c.reshape(B, S, G, N)
+
+    if state is None:
+        y = ops.ssd_scan(xh, p["a_log"], bh, ch, dt, use_kernel=use_kernel)
+        new_ssm = None  # training path does not return state
+    else:
+        y, new_ssm = _ssd_recurrent(p, xh, bh, ch, dt, state["ssm"], G, H)
+    y = y + xh * p["d_skip"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, S, d_inner)
+
+    # gated RMSNorm (Mamba-2)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + cfg.norm_eps)
+    y = (yf * p["norm_scale"].astype(jnp.float32)).astype(xin.dtype)
+
+    out = y @ p["w_out"]
+    new_state = None if state is None else {"conv": new_conv, "ssm": new_ssm}
+    return out, new_state
+
+
+def _ssd_recurrent(p, xh, bh, ch, dt, ssm_state, G, H):
+    """Stateful recurrence for any S (decode S=1, stateful prefill S>1):
+    state' = decay*state + dt x (x b^T); y_t = state_t . c_t."""
+    rep = H // G
+    bq = jnp.repeat(bh, rep, axis=2)           # (B,S,H,N)
+    cq = jnp.repeat(ch, rep, axis=2)
+    a = -jnp.exp(p["a_log"])
+
+    def step(state, inp):
+        x_t, b_t, c_t, dt_t = inp              # (B,H,P),(B,H,N),(B,H,N),(B,H)
+        decay = jnp.exp(a[None] * dt_t)
+        state = (state * decay[..., None, None]
+                 + jnp.einsum("bhp,bhn->bhpn",
+                              x_t.astype(jnp.float32) * dt_t[..., None],
+                              b_t.astype(jnp.float32)))
+        y = jnp.einsum("bhpn,bhn->bhp", state, c_t.astype(jnp.float32))
+        return state, y
+
+    xs = (jnp.moveaxis(xh, 1, 0), jnp.moveaxis(bq, 1, 0),
+          jnp.moveaxis(cq, 1, 0), jnp.moveaxis(dt, 1, 0))
+    new_state, ys = jax.lax.scan(step, ssm_state, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(xh.dtype), new_state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int):
+    s, d_inner, H = _dims(cfg)
+    conv_ch = d_inner + 2 * s.n_groups * s.d_state
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_ch), cfg.cdtype),
+        "ssm": jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32),
+    }

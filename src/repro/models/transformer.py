@@ -1,0 +1,374 @@
+"""Model assembly: config-driven decoder-only / encoder-decoder LMs.
+
+Depth is organised as segments of repeated block-units; per-unit params
+are stacked on a leading repeat axis and the forward pass lax.scans over
+them (with per-unit remat), so HLO size -- and 512-device dry-run compile
+time -- is O(1) in depth.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import pspec
+from repro.models import rglru as rglru_lib
+from repro.models import ssm as ssm_lib
+from repro.models.config import BlockKind, ModelConfig, Segment
+from repro.models.layers import (cross_entropy, embed, he_init, init_embed,
+                                 init_mlp, init_rmsnorm, mlp, rmsnorm,
+                                 unembed)
+
+
+# ---------------------------------------------------------------------------
+# Single block
+# ---------------------------------------------------------------------------
+
+def _init_block(key, kind: BlockKind, cfg: ModelConfig, use_moe: bool,
+                cross: bool):
+    ks = jax.random.split(key, 6)
+    p = {"norm_mix": init_rmsnorm(ks[0], cfg.d_model, cfg.pdtype)}
+    if kind in (BlockKind.ATTN, BlockKind.LOCAL_ATTN):
+        p["attn"] = attn_lib.init_attention(ks[1], cfg)
+    elif kind == BlockKind.MLA:
+        p["attn"] = attn_lib.init_mla(ks[1], cfg)
+    elif kind == BlockKind.SSM:
+        p["ssm"] = ssm_lib.init_ssm(ks[1], cfg)
+        return p                                  # mamba2: no MLP sub-block
+    elif kind == BlockKind.RGLRU:
+        p["rglru"] = rglru_lib.init_rglru(ks[1], cfg)
+    if cross:
+        p["norm_cross"] = init_rmsnorm(ks[2], cfg.d_model, cfg.pdtype)
+        p["cross"] = attn_lib.init_attention(ks[3], cfg)
+    p["norm_mlp"] = init_rmsnorm(ks[4], cfg.d_model, cfg.pdtype)
+    if use_moe:
+        p["moe"] = moe_lib.init_moe(ks[5], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[5], cfg.d_model, cfg.d_ff, cfg.pdtype)
+    return p
+
+
+def _block_cache(kind: BlockKind, cfg: ModelConfig, batch: int, smax: int,
+                 cross: bool):
+    c = {}
+    if kind in (BlockKind.ATTN, BlockKind.LOCAL_ATTN):
+        shape = (batch, cfg.n_kv_heads, smax, cfg.hd)
+        c = {"k": jnp.zeros(shape, cfg.cdtype),
+             "v": jnp.zeros(shape, cfg.cdtype)}
+    elif kind == BlockKind.MLA:
+        m = cfg.mla
+        c = {"ckv": jnp.zeros((batch, smax, m.kv_lora), cfg.cdtype),
+             "kpe": jnp.zeros((batch, smax, m.rope_dim), cfg.cdtype)}
+    elif kind == BlockKind.SSM:
+        c = ssm_lib.init_ssm_state(cfg, batch)
+    elif kind == BlockKind.RGLRU:
+        c = rglru_lib.init_rglru_state(cfg, batch)
+    if cross:
+        ed = (batch, cfg.n_kv_heads, cfg.encoder_frames, cfg.hd)
+        c["xk"] = jnp.zeros(ed, cfg.cdtype)
+        c["xv"] = jnp.zeros(ed, cfg.cdtype)
+    return c
+
+
+def _apply_block(p, kind: BlockKind, cfg: ModelConfig, x, *, pos0, cache,
+                 enc_out=None, causal=True, use_kernel=False):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.float32(0.0)
+    h = rmsnorm(p["norm_mix"], x, cfg.norm_eps)
+    if kind in (BlockKind.ATTN, BlockKind.LOCAL_ATTN):
+        window = cfg.window if kind == BlockKind.LOCAL_ATTN else None
+        sub = None if cache is None else {"k": cache["k"], "v": cache["v"]}
+        o, new_sub = attn_lib.attention(
+            p["attn"], cfg, h, pos0=pos0, cache=sub, window=window,
+            causal=causal, use_kernel=use_kernel)
+    elif kind == BlockKind.MLA:
+        sub = None if cache is None else {"ckv": cache["ckv"],
+                                          "kpe": cache["kpe"]}
+        o, new_sub = attn_lib.mla_attention(p["attn"], cfg, h, pos0=pos0,
+                                            cache=sub, use_kernel=use_kernel)
+    elif kind == BlockKind.SSM:
+        sub = None if cache is None else {"conv": cache["conv"],
+                                          "ssm": cache["ssm"]}
+        o, new_sub = ssm_lib.ssm_block(p["ssm"], cfg, h, state=sub,
+                                       use_kernel=use_kernel)
+        new_cache = dict(cache) if cache is not None else None
+        if new_cache is not None:
+            new_cache.update(new_sub)
+        return x + o, new_cache, aux              # mamba2: block done
+    elif kind == BlockKind.RGLRU:
+        sub = None if cache is None else {"conv": cache["conv"],
+                                          "h": cache["h"]}
+        o, new_sub = rglru_lib.rglru_block(p["rglru"], cfg, h, state=sub)
+    else:
+        raise ValueError(kind)
+    x = x + o
+    new_cache = dict(cache) if cache is not None else None
+    if new_cache is not None and new_sub is not None:
+        for key in new_sub:
+            if key.endswith("@delta"):
+                # the full cache must NOT flow through the scan body
+                # (it would be stacked/copied); only the delta leaves it
+                new_cache.pop(key[: -len("@delta")], None)
+        new_cache.update(new_sub)
+
+    if "cross" in p and enc_out is not None:
+        h = rmsnorm(p["norm_cross"], x, cfg.norm_eps)
+        o, _ = _cross_attention(p["cross"], cfg, h, enc_out, cache)
+        x = x + o
+
+    h = rmsnorm(p["norm_mlp"], x, cfg.norm_eps)
+    if "moe" in p:
+        o, aux = moe_lib.moe_mlp(p["moe"], cfg, h)
+    else:
+        o = mlp(p["mlp"], h, cfg.act)
+    return x + o, new_cache, aux
+
+
+def _cross_attention(p, cfg: ModelConfig, x, enc_out, cache):
+    """Cross-attn: queries from x, keys/values from encoder output (or the
+    cached projections when enc_out is None at decode time)."""
+    B, S, _ = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    if enc_out is not None and not isinstance(enc_out, str):
+        k = (enc_out @ p["wk"]).reshape(
+            B, -1, Hkv, hd).transpose(0, 2, 1, 3)
+        v = (enc_out @ p["wv"]).reshape(
+            B, -1, Hkv, hd).transpose(0, 2, 1, 3)
+    else:
+        k, v = cache["xk"], cache["xv"]
+    o = attn_lib.sdpa(q, k, v, causal=False, use_kernel=False)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    return o @ p["wo"], None
+
+
+# ---------------------------------------------------------------------------
+# Segments (stacked + scanned)
+# ---------------------------------------------------------------------------
+
+def _init_segment(key, seg: Segment, cfg: ModelConfig, cross: bool):
+    def init_unit(k):
+        kks = jax.random.split(k, len(seg.kinds))
+        return {f"b{i}": _init_block(kks[i], kind, cfg, seg.moe, cross)
+                for i, kind in enumerate(seg.kinds)}
+    keys = jax.random.split(key, seg.repeat)
+    return jax.vmap(init_unit)(keys)              # leaves stacked on axis 0
+
+
+def _segment_cache(seg: Segment, cfg: ModelConfig, batch: int, smax: int,
+                   cross: bool):
+    def one(_):
+        return {f"b{i}": _block_cache(kind, cfg, batch, smax, cross)
+                for i, kind in enumerate(seg.kinds)}
+    return jax.vmap(one)(jnp.arange(seg.repeat))
+
+
+def _apply_segment(params, seg: Segment, cfg: ModelConfig, x, *, pos0,
+                   cache, enc_out=None, causal=True, use_kernel=False,
+                   remat=True):
+    def unit_apply(x, unit_in):
+        up, ucache = unit_in
+        x = pspec.batch_nd(x)
+        new_ucache = {} if ucache is not None else None
+        aux = jnp.float32(0.0)
+        for i, kind in enumerate(seg.kinds):
+            bc = None if ucache is None else ucache[f"b{i}"]
+            x, nc, a = _apply_block(
+                up[f"b{i}"], kind, cfg, x, pos0=pos0, cache=bc,
+                enc_out=enc_out, causal=causal, use_kernel=use_kernel)
+            if new_ucache is not None:
+                new_ucache[f"b{i}"] = nc
+            aux = aux + a
+        return x, (new_ucache, aux)
+
+    if remat:
+        unit_apply = jax.checkpoint(
+            unit_apply, policy=jax.checkpoint_policies.nothing_saveable)
+
+    if seg.repeat == 1:
+        sq = jax.tree.map(lambda a: a[0], params)
+        cq = None if cache is None else jax.tree.map(lambda a: a[0], cache)
+        x, (nc, aux) = unit_apply(x, (sq, cq))
+        new_cache = None if nc is None else jax.tree.map(
+            lambda a: a[None], nc)
+        if new_cache is not None:
+            new_cache = _merge_cache_deltas(cache, new_cache, pos0)
+        return x, new_cache, aux
+
+    def scan_body(x, unit_in):
+        return unit_apply(x, unit_in)
+
+    x, (new_cache, auxs) = jax.lax.scan(scan_body, x, (params, cache))
+    if new_cache is not None:
+        new_cache = _merge_cache_deltas(cache, new_cache, pos0)
+    return x, new_cache, jnp.sum(auxs)
+
+
+def _merge_cache_deltas(cache, new_cache, pos0):
+    """Decode path: blocks emit tiny '<key>@delta' updates (one token of
+    K/V / latent) instead of round-tripping the full cache slice through
+    the scan body (which copies GBs per layer). Merge each stacked delta
+    (R, B, ..., 1, d) into the original cache with ONE batched
+    dynamic-update-slice at pos0."""
+    merged = {}
+    for bkey, bval in new_cache.items():
+        out = {}
+        for key, val in bval.items():
+            if key.endswith("@delta"):
+                base = key[: -len("@delta")]
+                full = cache[bkey][base]
+                # seq axis = the delta axis of extent 1 (ndim-2)
+                start = [0] * full.ndim
+                start[-2] = pos0
+                out[base] = jax.lax.dynamic_update_slice(
+                    full, val.astype(full.dtype),
+                    tuple(jnp.int32(s) if isinstance(s, int) else s
+                          for s in start))
+            else:
+                out[key] = val
+        merged[bkey] = out
+    return merged
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 8)
+    cross = cfg.encoder_layers > 0
+    p = {
+        "embed": init_embed(ks[0], cfg.vocab_padded, cfg.d_model,
+                            cfg.pdtype),
+        "final_norm": init_rmsnorm(ks[1], cfg.d_model, cfg.pdtype),
+        "segments": [
+            _init_segment(jax.random.fold_in(ks[2], i), seg, cfg, cross)
+            for i, seg in enumerate(cfg.segments)],
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = he_init(ks[3], (cfg.d_model, cfg.vocab_padded),
+                               cfg.pdtype)
+    if cross:
+        enc_seg = Segment(kinds=(BlockKind.ATTN,), repeat=cfg.encoder_layers)
+        p["encoder"] = {
+            "segment": _init_segment(ks[4], enc_seg, cfg, cross=False),
+            "norm": init_rmsnorm(ks[5], cfg.d_model, cfg.pdtype),
+        }
+    return p
+
+
+def _lm_head(p, cfg: ModelConfig, x):
+    head = (p["embed"]["table"].T if cfg.tie_embeddings else p["lm_head"])
+    logits = pspec.logits(unembed(head, x, cfg.logit_softcap))
+    if cfg.vocab_padded != cfg.vocab:   # mask padded vocab rows
+        pad_mask = jnp.arange(cfg.vocab_padded) < cfg.vocab
+        logits = jnp.where(pad_mask, logits, -1e30)
+    return logits
+
+
+def encode(p, cfg: ModelConfig, frames):
+    """Whisper-style encoder over stub frame embeddings (B, F, d)."""
+    enc_seg = Segment(kinds=(BlockKind.ATTN,), repeat=cfg.encoder_layers)
+    x, _, _ = _apply_segment(p["encoder"]["segment"], enc_seg, cfg, frames,
+                             pos0=0, cache=None, causal=False)
+    return rmsnorm(p["encoder"]["norm"], x, cfg.norm_eps)
+
+
+def forward(p, cfg: ModelConfig, tokens, *, frontend_emb=None,
+            enc_frames=None, use_kernel=False, remat=True):
+    """Training/prefill-style full-sequence forward -> (logits, aux).
+
+    frontend_emb: (B, P, d) stub patch/frame embeddings prepended to the
+    token embeddings (VLM); enc_frames: (B, F, d) encoder input (audio).
+    """
+    x = pspec.batch_nd(embed(p["embed"], tokens).astype(cfg.cdtype))
+    if frontend_emb is not None:
+        x = jnp.concatenate([frontend_emb.astype(cfg.cdtype), x], axis=1)
+    enc_out = None
+    if cfg.encoder_layers > 0:
+        enc_out = encode(p, cfg, enc_frames.astype(cfg.cdtype))
+    aux = jnp.float32(0.0)
+    for seg, sp in zip(cfg.segments, p["segments"]):
+        x, _, a = _apply_segment(sp, seg, cfg, x, pos0=0, cache=None,
+                                 enc_out=enc_out, use_kernel=use_kernel,
+                                 remat=remat)
+        aux = aux + a
+    x = rmsnorm(p["final_norm"], x, cfg.norm_eps)
+    if frontend_emb is not None:
+        x = x[:, frontend_emb.shape[1]:]
+    return _lm_head(p, cfg, x), aux
+
+
+def loss_fn(p, cfg: ModelConfig, tokens, labels, *, frontend_emb=None,
+            enc_frames=None, use_kernel=False, aux_weight=0.01):
+    logits, aux = forward(p, cfg, tokens, frontend_emb=frontend_emb,
+                          enc_frames=enc_frames, use_kernel=use_kernel)
+    return cross_entropy(logits, labels, cfg.vocab) + aux_weight * aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, smax: int):
+    cross = cfg.encoder_layers > 0
+    return [_segment_cache(seg, cfg, batch, smax, cross)
+            for seg in cfg.segments]
+
+
+def prefill(p, cfg: ModelConfig, tokens, cache, *, frontend_emb=None,
+            enc_frames=None, use_kernel=False):
+    """Run the prompt through the model, filling `cache` in place (pos 0..S).
+    Returns (last_logits, cache)."""
+    x = embed(p["embed"], tokens).astype(cfg.cdtype)
+    if frontend_emb is not None:
+        x = jnp.concatenate([frontend_emb.astype(cfg.cdtype), x], axis=1)
+    enc_out = None
+    if cfg.encoder_layers > 0:
+        enc_out = encode(p, cfg, enc_frames.astype(cfg.cdtype))
+        cache = _fill_cross_cache(p, cfg, cache, enc_out)
+    new_cache = []
+    for seg, sp, sc in zip(cfg.segments, p["segments"], cache):
+        x, nc, _ = _apply_segment(sp, seg, cfg, x, pos0=0, cache=sc,
+                                  enc_out=enc_out, use_kernel=use_kernel)
+        new_cache.append(nc)
+    x = rmsnorm(p["final_norm"], x, cfg.norm_eps)
+    return _lm_head(p, cfg, x[:, -1:]), new_cache
+
+
+def decode_step(p, cfg: ModelConfig, token, cache, pos):
+    """One-token decode: token (B, 1), pos scalar int32 -> (logits, cache)."""
+    x = embed(p["embed"], token).astype(cfg.cdtype)
+    new_cache = []
+    for seg, sp, sc in zip(cfg.segments, p["segments"], cache):
+        x, nc, _ = _apply_segment(sp, seg, cfg, x, pos0=pos, cache=sc,
+                                  enc_out="cached"
+                                  if cfg.encoder_layers > 0 else None,
+                                  remat=False)
+        new_cache.append(nc)
+    x = rmsnorm(p["final_norm"], x, cfg.norm_eps)
+    return _lm_head(p, cfg, x), new_cache
+
+
+def _fill_cross_cache(p, cfg: ModelConfig, cache, enc_out):
+    """Precompute per-layer cross-attention K/V from the encoder output."""
+    B = enc_out.shape[0]
+    Hkv, hd = cfg.n_kv_heads, cfg.hd
+
+    new_cache = []
+    for seg, sp, sc in zip(cfg.segments, p["segments"], cache):
+        def fill_unit(up, uc):
+            out = dict(uc)
+            for i in range(len(seg.kinds)):
+                bp, bc = up[f"b{i}"], dict(uc[f"b{i}"])
+                if "cross" in bp:
+                    k = (enc_out @ bp["cross"]["wk"]).reshape(
+                        B, -1, Hkv, hd).transpose(0, 2, 1, 3)
+                    v = (enc_out @ bp["cross"]["wv"]).reshape(
+                        B, -1, Hkv, hd).transpose(0, 2, 1, 3)
+                    bc["xk"] = k.astype(bc["xk"].dtype)
+                    bc["xv"] = v.astype(bc["xv"].dtype)
+                out[f"b{i}"] = bc
+            return out
+        new_cache.append(jax.vmap(fill_unit)(sp, sc))
+    return new_cache

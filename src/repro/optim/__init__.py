@@ -1,0 +1,5 @@
+from repro.optim.adamw import AdamWConfig, OptState, global_norm, init, schedule, update
+from repro.optim import compression
+
+__all__ = ["AdamWConfig", "OptState", "global_norm", "init", "schedule",
+           "update", "compression"]

@@ -1,0 +1,56 @@
+"""Int8 error-feedback gradient compression for cross-pod all-reduce.
+
+At 1000+ nodes the pod-level gradient all-reduce is DCN-bound; int8
+quantisation with error feedback (residual carried to the next step)
+cuts those bytes 4x with no asymptotic convergence penalty (1-bit Adam /
+EF-SGD lineage). Usage: quantise before the pod-axis psum, dequantise
+after, accumulate the quantisation error locally.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: Any      # same tree as grads, f32
+
+
+def init(grads_shape) -> EFState:
+    return EFState(residual=jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_shape))
+
+
+def quantize(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """f32 -> (int8, scale). Symmetric per-tensor quantisation."""
+    amax = jnp.max(jnp.abs(g))
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, ef: EFState):
+    """Returns (quantised tree of (q, scale), new_ef, recon tree).
+
+    recon = dequantised view (what every worker will see after the
+    all-reduce of q); the error goes into the residual for next step.
+    """
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        q, s = quantize(gf)
+        recon = dequantize(q, s)
+        return (q, s), gf - recon, recon
+
+    flat = jax.tree.map(one, grads, ef.residual,
+                        is_leaf=lambda x: isinstance(x, jax.Array))
+    is3 = lambda t: isinstance(t, tuple) and len(t) == 3
+    qtree = jax.tree.map(lambda t: t[0], flat, is_leaf=is3)
+    new_res = jax.tree.map(lambda t: t[1], flat, is_leaf=is3)
+    recon = jax.tree.map(lambda t: t[2], flat, is_leaf=is3)
+    return qtree, EFState(residual=new_res), recon

@@ -1,0 +1,2 @@
+from repro.runtime.loop import FaultConfig, LoopStats, WorkerFailure, run
+__all__ = ["FaultConfig", "LoopStats", "WorkerFailure", "run"]

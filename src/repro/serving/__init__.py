@@ -1,0 +1,2 @@
+from repro.serving.retrieval import RetrievalService, embed_texts
+__all__ = ["RetrievalService", "embed_texts"]

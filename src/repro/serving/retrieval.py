@@ -1,0 +1,64 @@
+"""Retrieval serving path: LM embeddings + the paper's distributed LSH.
+
+This is the paper's workload with the model zoo as the feature extractor:
+  index build: embed documents -> DistributedLSHIndex.build (one routed
+               row per doc, Fig 3.2 preprocessing);
+  query:       embed query -> entropy offsets -> Layered-LSH route ->
+               per-shard bucket search -> (c,r)-NN results.
+
+Embeddings are mean-pooled final hidden states, l2-normalised (so the
+paper's Wiki/Image unit-norm setting applies directly).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DistributedLSHIndex, LSHConfig, Scheme
+from repro.models import forward
+from repro.models.config import ModelConfig
+from repro.models.layers import embed as embed_tokens
+from repro.models.transformer import _apply_segment  # reuse blocks
+from repro.models import transformer as tfm
+
+
+def embed_texts(params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    """Mean-pooled final hidden state, unit norm. tokens: (B, S)."""
+    x = embed_tokens(params["embed"], tokens).astype(cfg.cdtype)
+    for seg, sp in zip(cfg.segments, params["segments"]):
+        x, _, _ = _apply_segment(sp, seg, cfg, x, pos0=0, cache=None,
+                                 remat=False)
+    pooled = x.mean(axis=1).astype(jnp.float32)
+    return pooled / jnp.maximum(
+        jnp.linalg.norm(pooled, axis=-1, keepdims=True), 1e-9)
+
+
+@dataclasses.dataclass
+class RetrievalService:
+    """End-to-end embed->route->search service over a device mesh."""
+    cfg: ModelConfig
+    lsh: LSHConfig
+    params: dict
+    index: DistributedLSHIndex
+
+    @classmethod
+    def build(cls, cfg: ModelConfig, params, doc_tokens, mesh,
+              r: float = 0.25, c: float = 2.0, k: int = 10, L: int = 16,
+              W: float = 1.0, scheme: Scheme = Scheme.LAYERED,
+              seed: int = 0):
+        docs = embed_texts(params, cfg, doc_tokens)
+        lsh = LSHConfig(d=int(docs.shape[1]), k=k, W=W, r=r, c=c, L=L,
+                        n_shards=mesh.shape["shard"], scheme=scheme,
+                        seed=seed)
+        index = DistributedLSHIndex(lsh, mesh)
+        index.build(docs)
+        return cls(cfg=cfg, lsh=lsh, params=params, index=index)
+
+    def query(self, query_tokens) -> tuple[np.ndarray, np.ndarray, object]:
+        q = embed_texts(self.params, self.cfg, query_tokens)
+        res = self.index.query(q)
+        return res.best_gid, res.best_dist, res

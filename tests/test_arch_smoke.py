@@ -1,0 +1,108 @@
+"""Per-architecture smoke tests: a REDUCED config of the same family runs
+one forward + one train-grad step + a prefill/decode step on CPU, asserting
+output shapes and no NaNs. Full configs are exercised only via the dry-run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models import (decode_step, forward, init_cache, init_params,
+                          loss_fn, prefill)
+
+B, S = 2, 32
+
+
+def _inputs(cfg, key):
+    ks = jax.random.split(key, 3)
+    tokens = jax.random.randint(ks[0], (B, S), 0, cfg.vocab)
+    labels = jax.random.randint(ks[1], (B, S), 0, cfg.vocab)
+    kw = {}
+    if cfg.frontend == "vision":
+        kw["frontend_emb"] = jax.random.normal(
+            ks[2], (B, cfg.frontend_tokens, cfg.d_model)) * 0.02
+    if cfg.frontend == "audio":
+        kw["enc_frames"] = jax.random.normal(
+            ks[2], (B, cfg.encoder_frames, cfg.d_model)) * 0.02
+    return tokens, labels, kw
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_forward_shapes_and_finite(arch):
+    cfg = get_config(arch, reduced=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tokens, labels, kw = _inputs(cfg, jax.random.PRNGKey(1))
+    logits, aux = jax.jit(
+        lambda p, t: forward(p, cfg, t, **kw))(params, tokens)
+    assert logits.shape == (B, S, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_train_grad_step(arch):
+    cfg = get_config(arch, reduced=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tokens, labels, kw = _inputs(cfg, jax.random.PRNGKey(1))
+    loss, grads = jax.jit(jax.value_and_grad(
+        lambda p: loss_fn(p, cfg, tokens, labels, **kw)))(params)
+    assert np.isfinite(float(loss)) and float(loss) > 0
+    leaves = jax.tree.leaves(grads)
+    assert all(np.isfinite(np.asarray(g, np.float32)).all() for g in leaves)
+    # at least one nonzero grad per top-level group
+    total = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+                for g in leaves)
+    assert total > 0
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_prefill_then_decode_matches_forward(arch):
+    """decode_step at position t must reproduce the full-forward logits at
+    position t (the KV/state caches are exact, not approximations)."""
+    cfg = get_config(arch, reduced=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tokens, _, kw = _inputs(cfg, jax.random.PRNGKey(1))
+    smax = S + 4 + (cfg.frontend_tokens if cfg.frontend == "vision" else 0)
+
+    full_logits, _ = jax.jit(
+        lambda p, t: forward(p, cfg, t, **kw))(params, tokens)
+
+    cache = init_cache(cfg, B, smax)
+    prefix = tokens[:, : S - 1]
+    # VLM note: the frontend tokens shift cache positions; skip cache-exact
+    # check for the vision arch prefix (prefill includes patches).
+    last, cache = jax.jit(
+        lambda p, t, c: prefill(p, cfg, t, c, **kw))(params, prefix, cache)
+    pos = S - 1 + (cfg.frontend_tokens if cfg.frontend == "vision" else 0)
+    step_logits, cache = jax.jit(
+        lambda p, t, c: decode_step(p, cfg, t, c, jnp.int32(pos)))(
+        params, tokens[:, S - 1:S], cache)
+    got = np.asarray(step_logits[:, 0], np.float32)
+    want = np.asarray(full_logits[:, -1], np.float32)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_moe_aux_loss_positive():
+    cfg = get_config("granite-moe-1b-a400m", reduced=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    _, aux = forward(params, cfg, tokens)
+    assert float(aux) >= 1.0 - 1e-3  # Switch aux >= 1 at balance
+
+
+def test_param_counts_are_sane():
+    """Full configs must land near the advertised parameter counts."""
+    from repro.models import count_params
+    expect = {
+        "codeqwen1.5-7b": (6.0e9, 9.0e9),
+        "gemma-7b": (7.0e9, 10.0e9),
+        "phi3-mini-3.8b": (3.3e9, 4.5e9),
+        "mistral-nemo-12b": (11.0e9, 14.0e9),
+        "granite-moe-1b-a400m": (1.0e9, 1.7e9),
+        "deepseek-v2-lite-16b": (13.0e9, 18.0e9),
+        "mamba2-130m": (0.10e9, 0.2e9),
+        "recurrentgemma-2b": (2.2e9, 3.6e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = count_params(get_config(arch))
+        assert lo <= n <= hi, (arch, n)

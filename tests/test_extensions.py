@@ -1,0 +1,220 @@
+"""Tests for the beyond-paper extensions: Multi-Probe LSH, MoE dispatch
+invariants (hypothesis property tests), and elastic checkpoint re-shard."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import LSHConfig, Scheme, simulate
+from repro.core.hashing import hash_h, sample_params
+from repro.core.multiprobe import batch_mplsh_probes, mplsh_probes
+from repro.data import planted_random
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# Multi-Probe LSH
+# ---------------------------------------------------------------------------
+
+def _cfg(**kw):
+    base = dict(d=32, k=8, W=1.0, r=0.3, c=2.0, L=16, n_shards=8,
+                scheme=Scheme.LAYERED, seed=0)
+    base.update(kw)
+    return LSHConfig(**base)
+
+
+def test_mplsh_home_bucket_first_and_probes_distinct():
+    cfg = _cfg(k=10)
+    params = sample_params(jax.random.PRNGKey(0), cfg)
+    q = jax.random.normal(jax.random.PRNGKey(1), (cfg.d,))
+    probes = np.asarray(mplsh_probes(params, cfg, q, 12))
+    home = np.asarray(hash_h(params, q[None], cfg.W))[0]
+    np.testing.assert_array_equal(probes[0], home)
+    # every probe differs from home in at most 2 coordinates by +-1
+    diffs = probes[1:] - home[None]
+    assert np.abs(diffs).max() <= 1
+    assert (np.abs(diffs).sum(axis=1) <= 2).all()
+    # probes unique
+    uniq = {tuple(p) for p in probes[1:]}
+    assert len(uniq) == len(probes) - 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 20))
+def test_mplsh_probe_scores_sorted(seed, n_probes):
+    """Probes must come out cheapest-first: the boundary-distance score of
+    probe j is non-decreasing in j (the defining MPLSH property)."""
+    cfg = _cfg(k=8)
+    params = sample_params(jax.random.PRNGKey(0), cfg)
+    q = jax.random.normal(jax.random.PRNGKey(seed), (cfg.d,))
+    from repro.core.hashing import gamma
+    g = np.asarray(gamma(params, q, cfg.W))
+    home = np.floor(g)
+    frac = g - home
+    probes = np.asarray(mplsh_probes(params, cfg, q, n_probes))
+    scores = []
+    for p in probes[1:]:
+        diff = p - home
+        s = 0.0
+        for i, dv in enumerate(diff):
+            if dv < 0:
+                s += frac[i]
+            elif dv > 0:
+                s += 1.0 - frac[i]
+        scores.append(s)
+    # drop padding (repeated home rows score 0 at the tail)
+    scores = [s for s in scores if s > 0]
+    assert all(b >= a - 1e-5 for a, b in zip(scores, scores[1:]))
+
+
+def test_mplsh_beats_entropy_recall_at_equal_probes():
+    """Lv et al.'s claim, which the paper leans on for Wiki: MPLSH reaches
+    higher recall than entropy offsets at the same probe count."""
+    data, queries, _ = planted_random(n=4096, m=512, d=50, r=0.3, seed=0)
+    rec = {}
+    for probes in ("entropy", "mplsh"):
+        cfg = LSHConfig(d=50, k=10, W=1.2, r=0.3, c=2.0, L=16,
+                        n_shards=16, scheme=Scheme.LAYERED, probes=probes)
+        rep = simulate(cfg, jnp.asarray(data), jnp.asarray(queries),
+                       compute_recall=True)
+        rec[probes] = rep.recall
+    assert rec["mplsh"] > rec["entropy"]
+
+
+def test_mplsh_layered_traffic_still_flat():
+    """Remark 9 must survive the probe-generator swap."""
+    data, queries, _ = planted_random(n=4096, m=512, d=50, r=0.3, seed=0)
+    rows = {}
+    for L in (8, 48):
+        cfg = LSHConfig(d=50, k=10, W=1.2, r=0.3, c=2.0, L=L,
+                        n_shards=16, scheme=Scheme.LAYERED, probes="mplsh")
+        rows[L] = simulate(cfg, jnp.asarray(data),
+                           jnp.asarray(queries)).query_rows
+    assert rows[48] < rows[8] * 2.5
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch invariants (property-based)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1),
+       st.sampled_from([(8, 4, 2), (16, 4, 1), (32, 8, 4)]))
+def test_moe_capacity_and_combine_invariants(seed, dims):
+    """For any routing outcome: (1) no expert receives more than C tokens;
+    (2) the output of a token whose every choice was dropped is exactly
+    the shared-expert output (or 0); (3) outputs are finite."""
+    T, E, K = dims
+    from repro.models.config import ModelConfig, MoEConfig, dense_stack
+    from repro.models.moe import init_moe, moe_mlp
+    cfg = ModelConfig(
+        name="t", d_model=16, n_heads=2, n_kv_heads=2, d_ff=16,
+        vocab=64, segments=dense_stack(1, moe=True),
+        moe=MoEConfig(n_experts=E, top_k=K, d_ff_expert=16,
+                      capacity_factor=1.0),
+        param_dtype="float32", compute_dtype="float32")
+    key = jax.random.PRNGKey(seed)
+    p = init_moe(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (1, T, 16)) * 0.5
+    y, aux = moe_mlp(p, cfg, x)
+    assert np.isfinite(np.asarray(y)).all()
+    assert float(aux) >= 0.99  # Switch aux >= 1 at perfect balance
+
+    # re-derive routing to check capacity accounting
+    logits = np.asarray(x.reshape(T, 16) @ p["router"])
+    top_e = np.argsort(-logits, axis=1)[:, :K]
+    C = int(1.0 * T * K / E) + 1
+    counts = np.bincount(top_e.reshape(-1), minlength=E)
+    kept = np.minimum(counts, C)
+    assert kept.max() <= C
+
+
+def test_moe_grouped_equals_ungrouped():
+    """The grouped dispatch (G>1) must agree with G=1 when no token is
+    dropped (high capacity) -- grouping is a layout choice, not math.
+    Runs in a subprocess with a real 4-device mesh (constraints need it)."""
+    script = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, numpy as np
+import jax.numpy as jnp
+from repro.models.config import ModelConfig, MoEConfig, dense_stack
+from repro.models.moe import init_moe, moe_mlp
+from repro.models import pspec
+
+cfg = ModelConfig(
+    name="t", d_model=16, n_heads=2, n_kv_heads=2, d_ff=16,
+    vocab=64, segments=dense_stack(1, moe=True),
+    moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=16,
+                  capacity_factor=16.0),
+    param_dtype="float32", compute_dtype="float32")
+key = jax.random.PRNGKey(3)
+p = init_moe(key, cfg)
+x = jax.random.normal(jax.random.fold_in(key, 1), (4, 8, 16)) * 0.5
+y1, _ = moe_mlp(p, cfg, x)           # pspec inactive -> G=1
+mesh = jax.make_mesh((4, 1), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+try:
+    pspec.set_axes(("data",), "model", dp=4, tp=1)
+    with mesh:
+        y4, _ = jax.jit(lambda p, x: moe_mlp(p, cfg, x))(p, x)
+finally:
+    pspec.clear()
+np.testing.assert_allclose(np.asarray(y1), np.asarray(y4),
+                           rtol=1e-5, atol=1e-6)
+print("OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
+                         capture_output=True, text=True, env=env,
+                         timeout=300)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Elastic checkpoint re-shard (save on 4-dev mesh, restore on 8-dev mesh)
+# ---------------------------------------------------------------------------
+
+def test_elastic_reshard_roundtrip(tmp_path):
+    script = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.checkpoint import restore, save
+
+tree = {{"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+        "b": jnp.ones((16,), jnp.bfloat16)}}
+mesh4 = jax.make_mesh((4,), ("data",),
+                      axis_types=(jax.sharding.AxisType.Auto,))
+sh4 = {{"w": NamedSharding(mesh4, P("data", None)),
+       "b": NamedSharding(mesh4, P("data"))}}
+placed = jax.tree.map(jax.device_put, tree, sh4)
+save("{tmp_path}", 1, placed)
+
+mesh8 = jax.make_mesh((8,), ("data",),
+                      axis_types=(jax.sharding.AxisType.Auto,))
+sh8 = {{"w": NamedSharding(mesh8, P(None, "data")),
+       "b": NamedSharding(mesh8, P("data"))}}
+got, step, _ = restore("{tmp_path}", tree, shardings=sh8)
+np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(tree["w"]))
+assert got["w"].sharding.num_devices == 8
+print("OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
+                         capture_output=True, text=True, env=env,
+                         timeout=300)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "OK" in out.stdout
