@@ -2,8 +2,14 @@
 analytic simulator) at small device counts, plus the Pallas-kernel search
 path vs jnp. Runs in a subprocess with 8 host devices.
 
-Reports build/query time, live routed rows and the static all_to_all wire
-bytes per scheme -- the TPU-implementation view of Fig 4.1.
+Two regimes:
+  batch     -- one-shot build + batch query (the paper's MapReduce view):
+               build/query time, live routed rows, static all_to_all wire
+               bytes per scheme (the TPU-implementation view of Fig 4.1).
+  streaming -- the serving view: a ShardedLSHService answers a mixed
+               insert+query stream; reports steady-state throughput
+               (queries/s, inserts/s), per-flush latency, routed
+               rows/query and the per-shard load-balance trajectory.
 """
 from __future__ import annotations
 
@@ -16,37 +22,78 @@ _SCRIPT = """
 import time
 import jax, numpy as np
 import jax.numpy as jnp
-from repro.core import LSHConfig, Scheme, DistributedLSHIndex
+from repro.compat import make_mesh
+from repro.core import (LSHConfig, Scheme, DistributedLSHIndex,
+                        simulate_stream)
 from repro.data import planted_random
+from repro.serving import ServiceStats, ShardedLSHService
 
-data, queries, _ = planted_random(n=16384, m=1024, d=64, r=0.3, seed=0)
+N, M, D = {n}, {m}, 64
+data, queries, _ = planted_random(n=N, m=M, d=D, r=0.3, seed=0)
 data, queries = jnp.asarray(data), jnp.asarray(queries)
-mesh = jax.make_mesh((8,), ("shard",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("shard",))
 print("scheme,phase,ms,rows,capacity_rows")
 for scheme in (Scheme.SIMPLE, Scheme.LAYERED):
-    cfg = LSHConfig(d=64, k=10, W=1.0, r=0.3, c=2.0, L=16, n_shards=8,
+    cfg = LSHConfig(d=D, k=10, W=1.0, r=0.3, c=2.0, L=16, n_shards=8,
                     scheme=scheme, seed=0)
     idx = DistributedLSHIndex(cfg, mesh)
     t0 = time.monotonic(); br = idx.build(data); t_build = time.monotonic()-t0
     t0 = time.monotonic(); qr = idx.query(queries); t_q1 = time.monotonic()-t0
     t0 = time.monotonic(); qr = idx.query(queries); t_q2 = time.monotonic()-t0
-    cap_rows = 8 * 8 * idx._query_capacity(1024 // 8)
-    print(f"{scheme.value},build,{t_build*1e3:.1f},{br.data_load.sum()},")
-    print(f"{scheme.value},query_warm,{t_q2*1e3:.1f},"
-          f"{int(qr.query_load.sum())},{cap_rows}")
+    cap_rows = 8 * 8 * idx._query_capacity(M // 8)
+    print(f"{{scheme.value}},build,{{t_build*1e3:.1f}},{{br.data_load.sum()}},")
+    print(f"{{scheme.value}},query_warm,{{t_q2*1e3:.1f}},"
+          f"{{int(qr.query_load.sum())}},{{cap_rows}}")
     assert qr.drops == 0 and br.drops == 0
+
+# ---- streaming serving mix: grow the index while answering queries ----
+print("scheme,qps,ips,p50_ms,rows_per_query,load_skew,occupancy,drops")
+STEPS, INS, BUCKET = {steps}, {ins}, {bucket}
+for scheme in (Scheme.SIMPLE, Scheme.LAYERED):
+    cfg = LSHConfig(d=D, k=10, W=1.0, r=0.3, c=2.0, L=16, n_shards=8,
+                    scheme=scheme, seed=0)
+    idx = DistributedLSHIndex(cfg, mesh)
+    n0 = N - STEPS * INS
+    idx.build(data[:n0], capacity=idx._store_capacity(N))
+    svc = ShardedLSHService(idx, bucket_size=BUCKET, max_latency_ms=50.0)
+    # warm both compiled paths
+    svc.insert(data[n0:n0 + INS]); svc.submit_batch(
+        np.asarray(queries[:BUCKET])); svc.drain()
+    svc.stats = ServiceStats()
+    lat = []
+    for t in range(1, STEPS):
+        lo = n0 + t * INS
+        svc.insert(data[lo:lo + INS])
+        sel = (np.arange(BUCKET) + t * BUCKET) % M
+        t0 = time.monotonic()
+        svc.submit_batch(np.asarray(queries)[sel])
+        svc.drain()
+        lat.append(time.monotonic() - t0)
+    st = svc.stats
+    load = svc.shard_load()
+    skew = load.max() / max(load.mean(), 1)
+    print(f"{{scheme.value}},{{st.queries_per_s:.0f}},"
+          f"{{st.inserts_per_s:.0f}},{{np.median(lat)*1e3:.1f}},"
+          f"{{st.routed_rows/max(st.queries,1):.2f}},{{skew:.2f}},"
+          f"{{st.occupancy:.2f}},{{st.drops}}")
+    assert st.drops == 0
+    # analytic cross-check: same mix through the simulator
+    rep = simulate_stream(cfg, data, queries, n_prefix=n0,
+                          insert_batch=INS, query_batch=BUCKET)
+    print(f"# analytic: {{rep.summary()}}")
 """
 
 
-def main():
+def main(smoke: bool = False):
+    sizes = dict(n=2048, m=256, steps=2, ins=128, bucket=64) if smoke \
+        else dict(n=16384, m=1024, steps=8, ins=512, bucket=128)
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env["PYTHONPATH"] = os.path.join(repo, "src")
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(_SCRIPT)],
-                         capture_output=True, text=True, env=env,
-                         timeout=900)
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_SCRIPT.format(**sizes))],
+        capture_output=True, text=True, env=env, timeout=1800)
     if out.returncode != 0:
         raise RuntimeError(out.stderr[-2000:])
     print(out.stdout.strip())

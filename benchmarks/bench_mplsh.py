@@ -13,12 +13,12 @@ from repro.core import LSHConfig, Scheme, simulate
 from repro.data import planted_random
 
 
-def run():
-    data, queries, _ = planted_random(n=8192, m=1024, d=50, r=0.3, seed=0)
+def run(n=8192, m=1024, ls=(8, 16, 32, 64)):
+    data, queries, _ = planted_random(n=n, m=m, d=50, r=0.3, seed=0)
     data, queries = jnp.asarray(data), jnp.asarray(queries)
     rows = []
     for probes in ("entropy", "mplsh"):
-        for L in (8, 16, 32, 64):
+        for L in ls:
             cfg = LSHConfig(d=50, k=10, W=1.2, r=0.3, c=2.0, L=L,
                             n_shards=32, scheme=Scheme.LAYERED,
                             probes=probes, seed=0)

@@ -10,8 +10,6 @@ Paper claims replicated here:
 """
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.paper_common import run_scheme
 from repro.core import Scheme
 

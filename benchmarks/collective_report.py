@@ -13,8 +13,6 @@ os.environ["XLA_FLAGS"] = (
 import argparse
 import re
 
-import jax
-
 from repro.configs import get_config
 from repro.launch import hlo_cost
 from repro.launch import steps as steps_lib

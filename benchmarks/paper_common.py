@@ -6,11 +6,9 @@ skew ordering) are scale-free, which is what the figures assert.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import LSHConfig, Scheme, simulate
 from repro.data import image_histograms, planted_random, tfidf_like
@@ -30,7 +28,16 @@ N_DATA = 20_000
 N_QUERY = 2_000
 
 
-def load(name: str, n=N_DATA, m=N_QUERY):
+def set_scale(n: int, m: int) -> None:
+    """Shrink the dataset scale (CI smoke lane); relative claims are
+    scale-free but only checked at the default scale."""
+    global N_DATA, N_QUERY
+    N_DATA, N_QUERY = n, m
+
+
+def load(name: str, n=None, m=None):
+    n = N_DATA if n is None else n
+    m = N_QUERY if m is None else m
     loader, d, W, k, r, c = DATASETS[name]
     data, queries = loader(n, m)
     return (jnp.asarray(data, jnp.float32),

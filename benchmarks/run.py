@@ -2,9 +2,11 @@
 
   PYTHONPATH=src python -m benchmarks.run          # everything
   PYTHONPATH=src python -m benchmarks.run --fast   # skip the slow ones
+  PYTHONPATH=src python -m benchmarks.run --smoke  # CI: tiny configs only
 
 Prints ``name,us_per_call,derived`` CSV blocks per benchmark, then the
-paper-claim checks.
+paper-claim checks (skipped under --smoke: relative claims are only
+asserted at the default dataset scale).
 """
 from __future__ import annotations
 
@@ -17,10 +19,44 @@ def _section(name):
     print(f"\n===== {name} =====")
 
 
+def smoke(argv=None):
+    """Prove every benchmark imports and runs one tiny config (<~2 min).
+
+    No paper-claim checks -- those need the full dataset scale; this lane
+    exists so CI catches import errors and API drift in the bench
+    scripts, not to validate the figures.
+    """
+    from benchmarks import (bench_distributed, bench_kernels, bench_mplsh,
+                            bench_schemes, bench_shuffle_vs_L,
+                            collective_report, paper_common, roofline)
+    assert collective_report and roofline  # import-only (need artifacts)
+    paper_common.set_scale(n=2000, m=200)
+
+    _section("smoke: fig4.1 shuffle vs L (random, tiny)")
+    rows = bench_shuffle_vs_L.run(datasets=("random",), ls=(4, 8))
+    print(f"fig4.1,rows={len(rows)}")
+    _section("smoke: fig4.2 scheme comparison (tiny)")
+    srows = bench_schemes.run(ls=(8,))
+    t1 = bench_schemes.table1(n_shards=64)
+    print(f"fig4.2,rows={len(srows)},table1={len(t1)}")
+    _section("smoke: mplsh composition (tiny)")
+    mrows = bench_mplsh.run(n=2048, m=256, ls=(8,))
+    print(f"mplsh,rows={len(mrows)}")
+    _section("smoke: kernel micro-benchmarks")
+    bench_kernels.main()
+    _section("smoke: distributed index + streaming serve (8 host devices)")
+    bench_distributed.main(smoke=True)
+    print("\nsmoke OK: all benchmark scripts import and run")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny configs, no claim checks (CI lane)")
     args = ap.parse_args(argv)
+    if args.smoke:
+        return smoke()
     failures = []
 
     _section("Fig4.1 shuffle/recall/runtime vs L (simple vs layered)")

@@ -12,10 +12,10 @@ import os
 # jax import; harmless on CPU)
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import make_mesh
 from repro.core import DistributedLSHIndex, LSHConfig, Scheme, simulate
 from repro.data import planted_random
 
@@ -24,8 +24,7 @@ def main():
     data, queries, planted = planted_random(n=4096, m=512, d=64, r=0.3)
     data, queries = jnp.asarray(data), jnp.asarray(queries)
 
-    mesh = jax.make_mesh((8,), ("shard",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("shard",))
 
     print("== traffic: simple vs layered (analytic, 64 shards) ==")
     for scheme in (Scheme.SIMPLE, Scheme.LAYERED):

@@ -1,8 +1,10 @@
-"""End-to-end serving driver (the paper's workload, with the LM zoo as
-the feature extractor): embed documents with a reduced-config LM, build
-the distributed Layered-LSH index over the embeddings, then serve batched
-query requests through embed -> entropy offsets -> Layered route ->
-per-shard bucket search.
+"""End-to-end streaming serving driver (the paper's workload, with the LM
+zoo as the feature extractor): embed documents with a reduced-config LM,
+build the distributed Layered-LSH index over a *prefix* of the corpus,
+then serve a mixed insert/query stream through ``ShardedLSHService`` --
+new documents are routed into the per-shard append regions while queries
+micro-batch (pad-to-bucket, max-latency flush) through embed -> entropy
+offsets -> Layered route -> per-shard bucket search.
 
   PYTHONPATH=src python examples/serve_retrieval.py [--arch gemma-7b]
 """
@@ -17,63 +19,78 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import make_mesh
 from repro.configs import get_config
 from repro.core import Scheme
 from repro.models import init_params
-from repro.serving import RetrievalService, embed_texts
+from repro.serving import RetrievalService
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma-7b")
     ap.add_argument("--docs", type=int, default=2048)
-    ap.add_argument("--batches", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=4)
     ap.add_argument("--batch-size", type=int, default=64)
+    ap.add_argument("--insert-size", type=int, default=128)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=True)
     params = init_params(jax.random.PRNGKey(0), cfg)
-    mesh = jax.make_mesh((8,), ("shard",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("shard",))
 
     # synthetic "documents": token sequences; queries are near-duplicate
     # docs (the dedup / near-dup search use-case)
     key = jax.random.PRNGKey(1)
-    doc_tokens = jax.random.randint(key, (args.docs, 32), 0, cfg.vocab)
+    n_total = args.docs + args.steps * args.insert_size
+    doc_tokens = jax.random.randint(key, (n_total, 32), 0, cfg.vocab)
 
     t0 = time.monotonic()
-    svc = RetrievalService.build(cfg, params, doc_tokens, mesh,
+    svc = RetrievalService.build(cfg, params, doc_tokens[:args.docs], mesh,
                                  r=0.2, L=16, k=8, W=0.5,
-                                 scheme=Scheme.LAYERED)
+                                 scheme=Scheme.LAYERED,
+                                 bucket_size=args.batch_size)
     print(f"[build] indexed {args.docs} docs in "
           f"{time.monotonic() - t0:.1f}s "
           f"(data load max={svc.index.build_result.data_load.max()})")
 
     hits = 0
-    total_rows = 0
-    for b in range(args.batches):
+    n_indexed = args.docs
+    for b in range(args.steps):
+        # ---- streaming insert: the corpus grows while we serve ----
+        lo = args.docs + b * args.insert_size
+        new_gids = svc.insert_docs(doc_tokens[lo:lo + args.insert_size])
+        n_indexed += len(new_gids)
+
+        # ---- query mix: near-duplicates of docs indexed so far ----
         kq = jax.random.fold_in(jax.random.PRNGKey(2), b)
-        src = jax.random.randint(kq, (args.batch_size,), 0, args.docs)
+        src = jax.random.randint(kq, (args.batch_size,), 0, n_indexed)
         qtok = doc_tokens[src]
         # perturb one token per query -> near-duplicate retrieval
         pos = jax.random.randint(kq, (args.batch_size, 1), 0, 32)
         newtok = jax.random.randint(kq, (args.batch_size, 1), 0, cfg.vocab)
-        qtok = jnp.take_along_axis(qtok, pos, 1) * 0 + qtok  # copy
         qtok = qtok.at[jnp.arange(args.batch_size), pos[:, 0]].set(
             newtok[:, 0])
         t0 = time.monotonic()
-        gids, dists, res = svc.query(qtok)
+        gids, dists, handles = svc.query(qtok)
         dt = time.monotonic() - t0
         batch_hits = int((gids == np.asarray(src)).sum())
         hits += batch_hits
-        total_rows += int(res.fq.sum())
-        print(f"[serve] batch {b}: {args.batch_size} queries in {dt:.2f}s "
-              f"rows/query={res.fq.mean():.2f} "
-              f"self-retrieval={batch_hits}/{args.batch_size}")
-    n = args.batches * args.batch_size
-    print(f"[serve] total: self-retrieval {hits}/{n} "
-          f"({hits / n:.1%}), avg rows/query "
-          f"{total_rows / n:.2f} (vs L=16 for simple LSH)")
+        fq = np.asarray([h.fq for h in handles])
+        load = svc.service.shard_load()
+        print(f"[serve] step {b}: +{len(new_gids)} docs, "
+              f"{args.batch_size} queries in {dt:.2f}s "
+              f"rows/query={fq.mean():.2f} "
+              f"self-retrieval={batch_hits}/{args.batch_size} "
+              f"load max/avg={load.max() / max(load.mean(), 1):.2f}")
+
+    st = svc.service.stats
+    n = args.steps * args.batch_size
+    print(f"[serve] total: self-retrieval {hits}/{n} ({hits / n:.1%}), "
+          f"avg rows/query {st.routed_rows / max(st.queries, 1):.2f} "
+          f"(vs L=16 for simple LSH)")
+    print(f"[serve] {st.summary()}")
+    assert st.drops == 0, "capacity overflow in the serving stream"
 
 
 if __name__ == "__main__":

@@ -2,7 +2,7 @@
 
 32L d_model=4096 32H (GQA kv=32 -> effectively MHA) d_ff=13440 vocab=92416.
 """
-from repro.models.config import BlockKind, ModelConfig, dense_stack
+from repro.models.config import ModelConfig, dense_stack
 
 
 def config() -> ModelConfig:

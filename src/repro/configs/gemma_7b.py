@@ -2,7 +2,7 @@
 
 28L d_model=3072 16H (GQA kv=16) d_ff=24576 vocab=256000.
 """
-from repro.models.config import BlockKind, ModelConfig, dense_stack
+from repro.models.config import ModelConfig, dense_stack
 
 
 def config() -> ModelConfig:

@@ -14,7 +14,7 @@ from repro.core.hashing import (HashParams, gamma, gh, g_of, hash_h,
                                 shard_of)
 from repro.core.offsets import batch_query_offsets, query_offsets
 from repro.core.accounting import TrafficReport
-from repro.core.simulate import simulate
+from repro.core.simulate import StreamReport, simulate, simulate_stream
 from repro.core.index import DistributedLSHIndex
 
 __all__ = [
@@ -22,5 +22,6 @@ __all__ = [
     "HashParams", "gamma", "gh", "g_of", "hash_h", "pack_buckets",
     "sample_params", "shard_key", "shard_of",
     "batch_query_offsets", "query_offsets",
-    "TrafficReport", "simulate", "DistributedLSHIndex",
+    "TrafficReport", "simulate", "StreamReport", "simulate_stream",
+    "DistributedLSHIndex",
 ]

@@ -13,7 +13,6 @@ of bucket vectors up to a 2^-64 collision chance.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -4,13 +4,24 @@ Machines = devices along one mesh axis ("shard").  The MapReduce shuffle /
 Active-DHT send becomes a fixed-capacity ``jax.lax.all_to_all`` inside
 ``shard_map``:
 
-  build:  every data point p ships one row  (GH(p), <H(p), p, gid>)
+  insert: every data point p ships one row  (GH(p), <H(p), p, gid>)
+          and lands in a free slot of the destination shard's append
+          region (tombstoned slots are reused, occupancy is accounted)
+  delete: gids are broadcast; owning shards tombstone their rows and the
+          bucket scan honours the mask
   query:  every query q ships f_q rows      (GH(q+delta_i), <q, qid>)
           -- one per DISTINCT Key among its offsets (Theorem 8 bounds f_q)
   search: the receiving shard regenerates the offsets from qid (consistent
           RNG), selects those whose Key == its own id, and scans its stored
           rows for bucket-equal points within distance cr (Fig 3.2 Reduce).
   return: two pmin collectives combine per-shard best candidates.
+
+``build`` is a thin wrapper: reset the store, then ``insert`` the whole
+dataset.  The index is therefore a *streaming* service primitive -- the
+store grows online under a mixed insert/delete/query workload and every
+routed step reuses a cached compiled executable (keyed on batch shape and
+store capacity) with donated store buffers, so steady-state serving does
+no retracing and no store copies.
 
 Static capacities are derived from the scheme's theoretical row bound
 (LSHConfig.pairs_per_query) times a slack factor; overflow is counted and
@@ -19,19 +30,19 @@ must be zero for a valid run (tests assert this).
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.core import accounting
+from repro.compat import shard_map
 from repro.core.config import LSHConfig, Scheme
-from repro.core.hashing import (HashParams, hash_h, pack_buckets,
-                                sample_params, shard_key)
+from repro.core.hashing import (hash_h, pack_buckets, sample_params,
+                                shard_key)
 from repro.core.offsets import query_offsets
 
 INF = jnp.float32(jnp.finfo(jnp.float32).max)
@@ -84,17 +95,45 @@ def _a2a(x: jax.Array, axis_name: str) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# Index
+# Streaming store
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
+class StoreState:
+    """Per-shard routed append regions (leading dim = mesh shard axis)."""
+    x: jax.Array          # (S, cap, d) stored points
+    packed: jax.Array     # (S, cap, 2) packed H buckets (uint32)
+    gid: jax.Array        # (S, cap) global data ids (IMAX = empty)
+    valid: jax.Array      # (S, cap) bool liveness (False = free/tombstone)
+
+    @property
+    def capacity(self) -> int:
+        return self.x.shape[1]
+
+
+@dataclasses.dataclass
 class BuildResult:
-    store_x: jax.Array        # (S, N_store, d) per-shard stored points
-    store_packed: jax.Array   # (S, N_store, 2) packed H buckets
-    store_gid: jax.Array      # (S, N_store) global data ids
-    store_valid: jax.Array    # (S, N_store) bool
+    store_x: jax.Array        # (S, cap, d) per-shard stored points
+    store_packed: jax.Array   # (S, cap, 2) packed H buckets
+    store_gid: jax.Array      # (S, cap) global data ids
+    store_valid: jax.Array    # (S, cap) bool
     data_load: np.ndarray     # (S,) live rows stored per shard
     drops: int                # capacity overflow (must be 0)
+
+
+@dataclasses.dataclass
+class InsertResult:
+    shard_load: np.ndarray    # (S,) live rows stored per shard after merge
+    drops: int                # dispatch + append-region overflow (0 = clean)
+    n_inserted: int           # rows actually stored this call
+    capacity: int             # per-shard append-region capacity
+    gid_start: int            # first auto-assigned gid of this batch
+
+
+@dataclasses.dataclass
+class DeleteResult:
+    n_deleted: int            # rows tombstoned across all shards
+    shard_load: np.ndarray    # (S,) live rows remaining per shard
 
 
 @dataclasses.dataclass
@@ -132,14 +171,39 @@ class DistributedLSHIndex:
         kp, kq = jax.random.split(key)
         self.params = sample_params(kp, cfg)
         self.base_key = kq
-        self.build_result: Optional[BuildResult] = None
+        self.store: Optional[StoreState] = None
+        self._shard_load = np.zeros((cfg.n_shards,), np.int64)
+        self._drops = 0
+        self._n_live = 0
+        self._next_gid = 0
+        self._insert_fns: dict = {}
+        self._delete_fns: dict = {}
+        self._query_fns: dict = {}
 
     # ------------------------------------------------------------------
-    def _data_capacity(self, n_local: int) -> int:
+    # Capacity policy
+    # ------------------------------------------------------------------
+    def _dispatch_capacity(self, n_local: int) -> int:
+        """Per-(source, dest) all_to_all block capacity for one insert.
+
+        Locality-preserving placement is skewed by design (Table 1).  Bulk
+        builds concentrate around the balanced share, so the slack-sized
+        block suffices; small streaming batches do not, so their share is
+        doubled and clamped at n_local (all-to-one always fits: a small
+        batch can never overflow the dispatch, only the append region).
+        """
         if self.cfg.data_capacity is not None:
             return self.cfg.data_capacity
         S = self.cfg.n_shards
-        return max(8, int(math.ceil(n_local / S * self.slack)))
+        base = max(8, int(math.ceil(n_local / S * self.slack)))
+        if n_local > 64 * S:          # bulk regime: slack-share sizing
+            return base
+        return min(n_local, 2 * base)
+
+    def _store_capacity(self, n_live: int) -> int:
+        """Per-shard append-region capacity for a target live row count."""
+        S = self.cfg.n_shards
+        return max(8, int(math.ceil(n_live / S * self.slack)))
 
     def _query_capacity(self, m_local: int) -> int:
         if self.cfg.query_capacity is not None:
@@ -149,70 +213,256 @@ class DistributedLSHIndex:
         return max(8, int(math.ceil(rows / S * self.slack)))
 
     # ------------------------------------------------------------------
-    def build(self, data: jax.Array) -> BuildResult:
-        """Route every data point to its home shard and store it.
+    # Store lifecycle
+    # ------------------------------------------------------------------
+    def init_store(self, capacity: int) -> StoreState:
+        """Allocate empty per-shard append regions (capacity rows/shard)."""
+        cfg = self.cfg
+        S = cfg.n_shards
+        sharding = jax.sharding.NamedSharding(self.mesh, P(self.axis))
+        def alloc(shape, dtype, fill):
+            return jax.device_put(jnp.full(shape, fill, dtype), sharding)
+        self.store = StoreState(
+            x=alloc((S, capacity, cfg.d), jnp.float32, 0.0),
+            packed=alloc((S, capacity, 2), jnp.uint32, 0),
+            gid=alloc((S, capacity), jnp.int32, IMAX),
+            valid=alloc((S, capacity), jnp.bool_, False),
+        )
+        self._shard_load = np.zeros((S,), np.int64)
+        self._drops = 0
+        self._n_live = 0
+        return self.store
 
-        Args:
-          data: (n, d) global array; will be sharded over the mesh axis.
-        """
+    def _grow_store(self, capacity: int) -> None:
+        """Pad the append regions to a larger per-shard capacity."""
+        st = self.store
+        extra = capacity - st.capacity
+        if extra <= 0:
+            return
+        def pad(a, fill):
+            widths = [(0, 0)] * a.ndim
+            widths[1] = (0, extra)
+            return jnp.pad(a, widths, constant_values=fill)
+        self.store = StoreState(
+            x=pad(st.x, 0.0), packed=pad(st.packed, 0),
+            gid=pad(st.gid, IMAX), valid=pad(st.valid, False))
+
+    # ------------------------------------------------------------------
+    # Insert: route new rows through the GH all_to_all into free slots
+    # ------------------------------------------------------------------
+    def _make_insert_fn(self, n_loc: int, Ci: int, cap: int):
         cfg, params = self.cfg, self.params
         S = cfg.n_shards
-        n, d = data.shape
-        if n % S:
-            raise ValueError(f"n={n} must divide by n_shards={S}")
-        n_loc = n // S
-        C = self._data_capacity(n_loc)
         axis = self.axis
 
-        def build_shard(x_loc: jax.Array, gid_loc: jax.Array):
+        def insert_shard(x_loc, gid_loc, valid_loc, sx, sp, sg, sv):
+            sx, sp, sg, sv = sx[0], sp[0], sg[0], sv[0]
             hk = hash_h(params, x_loc, cfg.W)              # (n_loc, k)
             packed = pack_buckets(params, hk)              # (n_loc, 2)
             dest = jnp.mod(shard_key(params, cfg, hk), S).astype(jnp.int32)
-            valid = jnp.ones((n_loc,), bool)
-            slot, keep, drops = dispatch_slots(dest, valid, S, C)
-            nslots = S * C
-            sx = scatter_rows(slot, keep, x_loc, nslots, 0.0)
-            sp = scatter_rows(slot, keep, packed, nslots, 0)
-            sg = scatter_rows(slot, keep, gid_loc, nslots, IMAX)
-            sv = scatter_rows(slot, keep,
-                              keep.astype(jnp.int8), nslots, 0)
-            rx = _a2a(sx, axis)
-            rp = _a2a(sp, axis)
-            rg = _a2a(sg, axis)
-            rv = _a2a(sv, axis).astype(bool)
-            load = rv.sum().astype(jnp.int32)
-            return (rx[None], rp[None], rg[None], rv[None],
-                    load[None], drops[None])
+            slot, keep, d_drops = dispatch_slots(dest, valid_loc, S, Ci)
+            nslots = S * Ci
+            bx = scatter_rows(slot, keep, x_loc, nslots, 0.0)
+            bp = scatter_rows(slot, keep, packed, nslots, 0)
+            bg = scatter_rows(slot, keep, gid_loc, nslots, IMAX)
+            bv = scatter_rows(slot, keep, keep.astype(jnp.int8), nslots, 0)
+            rx = _a2a(bx, axis)
+            rp = _a2a(bp, axis)
+            rg = _a2a(bg, axis)
+            rv = _a2a(bv, axis).astype(bool)               # (S*Ci,)
 
-        gids = jnp.arange(n, dtype=jnp.int32)
-        spec_in = P(axis)
-        fn = jax.jit(jax.shard_map(
-            build_shard, mesh=self.mesh,
-            in_specs=(spec_in, spec_in),
-            out_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis)),
+            # ---- append into free slots (tombstones are reused) ----
+            n_free = jnp.sum(~sv).astype(jnp.int32)
+            free_order = jnp.argsort(sv)                   # free slots first,
+            rank = jnp.cumsum(rv) - 1                      # in index order
+            fit = rv & (rank < n_free)
+            s_drops = jnp.sum(rv & ~fit).astype(jnp.int32)
+            target = jnp.where(fit, free_order[jnp.clip(rank, 0, cap - 1)],
+                               cap)                        # cap = sink row
+
+            def merge(store, rows, fill):
+                sink = jnp.full((1,) + store.shape[1:], fill, store.dtype)
+                buf = jnp.concatenate([store, sink], axis=0)
+                return buf.at[target].set(jnp.where(
+                    fit.reshape((-1,) + (1,) * (rows.ndim - 1)), rows,
+                    buf[target]))[:cap]
+
+            nx = merge(sx, rx, 0.0)
+            npk = merge(sp, rp, 0)
+            ng = merge(sg, rg, IMAX)
+            nv = merge(sv, fit, False)
+            load = nv.sum().astype(jnp.int32)
+            stored = fit.sum().astype(jnp.int32)
+            return (nx[None], npk[None], ng[None], nv[None], load[None],
+                    (d_drops + s_drops)[None], stored[None])
+
+        spec = P(axis)
+        return jax.jit(shard_map(
+            insert_shard, mesh=self.mesh,
+            in_specs=(spec,) * 7, out_specs=(spec,) * 7,
             check_vma=False,   # pallas out_shape has no vma annotation
-        ))
-        rx, rp, rg, rv, load, drops = fn(data, gids)
-        self.build_result = BuildResult(
-            store_x=rx, store_packed=rp, store_gid=rg, store_valid=rv,
-            data_load=np.asarray(load), drops=int(np.asarray(drops).sum()))
-        return self.build_result
+        ), donate_argnums=(3, 4, 5, 6))
+
+    def insert(self, points: jax.Array,
+               gids: Optional[jax.Array] = None) -> InsertResult:
+        """Stream a batch of points into the routed store.
+
+        Any batch size is accepted: rows are padded to a multiple of
+        n_shards with invalid rows (which ship nothing).  The store grows
+        host-side when the live row count would exceed the slack-sized
+        append regions, so a well-balanced stream never drops rows.
+
+        The store buffers are DONATED to the compiled step (in-place
+        update, no copy): on accelerators any previously captured
+        ``build_result``/``store`` view is consumed by this call -- re-read
+        ``self.build_result`` after every mutation instead of holding one.
+        """
+        cfg = self.cfg
+        S = cfg.n_shards
+        n, d = points.shape
+        if d != cfg.d:
+            raise ValueError(f"points d={d} != cfg.d={cfg.d}")
+        gid_start = self._next_gid
+        if gids is None:
+            gids = jnp.arange(self._next_gid, self._next_gid + n,
+                              dtype=jnp.int32)
+            self._next_gid += n
+        else:
+            gids = jnp.asarray(gids, jnp.int32)
+            self._next_gid = max(self._next_gid, int(np.asarray(gids).max())
+                                 + 1) if n else self._next_gid
+
+        if self.store is None:
+            self.init_store(self._store_capacity(n))
+        else:
+            needed = self._store_capacity(self._n_live + n)
+            if needed > self.store.capacity:
+                # geometric growth: capacity is part of the compiled-fn
+                # cache key, so exact-fit growth would retrace every step
+                self._grow_store(max(needed, 2 * self.store.capacity))
+        st = self.store
+        cap = st.capacity
+
+        n_pad = int(math.ceil(n / S)) * S if n else S
+        pad = n_pad - n
+        x = jnp.concatenate(
+            [jnp.asarray(points, jnp.float32),
+             jnp.zeros((pad, cfg.d), jnp.float32)]) if pad else jnp.asarray(
+                 points, jnp.float32)
+        g = jnp.concatenate([gids, jnp.full((pad,), IMAX, jnp.int32)]) \
+            if pad else gids
+        valid = jnp.arange(n_pad) < n
+        n_loc = n_pad // S
+        Ci = self._dispatch_capacity(n_loc)
+
+        key = (n_loc, Ci, cap)
+        fn = self._insert_fns.get(key)
+        if fn is None:
+            fn = self._insert_fns[key] = self._make_insert_fn(n_loc, Ci, cap)
+        nx, npk, ng, nv, load, drops, stored = fn(
+            x, g, valid, st.x, st.packed, st.gid, st.valid)
+        self.store = StoreState(x=nx, packed=npk, gid=ng, valid=nv)
+        n_drops = int(np.asarray(drops).sum())
+        n_stored = int(np.asarray(stored).sum())
+        self._shard_load = np.asarray(load).astype(np.int64)
+        self._drops += n_drops
+        self._n_live += n_stored
+        return InsertResult(shard_load=np.asarray(load), drops=n_drops,
+                            n_inserted=n_stored, capacity=cap,
+                            gid_start=gid_start)
 
     # ------------------------------------------------------------------
-    def query(self, queries: jax.Array) -> QueryResult:
-        """Answer a batch of queries (m, d), m divisible by n_shards."""
-        if self.build_result is None:
-            raise RuntimeError("call build() first")
-        cfg, params, base_key = self.cfg, self.params, self.base_key
-        S, L, d = cfg.n_shards, cfg.L, cfg.d
-        m = queries.shape[0]
-        if m % S:
-            raise ValueError(f"m={m} must divide by n_shards={S}")
-        m_loc = m // S
-        Cq = self._query_capacity(m_loc)
+    # Delete: tombstone rows by gid (honoured by the bucket scan; the
+    # slots become free and are reused by later inserts)
+    # ------------------------------------------------------------------
+    def _make_delete_fn(self, n_del: int, cap: int):
         axis = self.axis
-        br = self.build_result
+
+        def delete_shard(gids_del, sv, sg):
+            sv, sg = sv[0], sg[0]
+            hit = jnp.any(sg[:, None] == gids_del[None, :], axis=1) & sv
+            nv = sv & ~hit
+            return (nv[None], hit.sum().astype(jnp.int32)[None],
+                    nv.sum().astype(jnp.int32)[None])
+
+        spec = P(axis)
+        return jax.jit(shard_map(
+            delete_shard, mesh=self.mesh,
+            in_specs=(P(), spec, spec), out_specs=(spec,) * 3,
+            check_vma=False,
+        ), donate_argnums=(1,))
+
+    def delete(self, gids) -> DeleteResult:
+        """Tombstone the given global ids (missing ids are ignored)."""
+        if self.store is None:
+            raise RuntimeError("insert() or build() first")
+        gids = np.asarray(gids, np.int32).reshape(-1)
+        n_pad = max(8, int(math.ceil(len(gids) / 8)) * 8)
+        padded = np.full((n_pad,), np.iinfo(np.int32).max, np.int32)
+        padded[:len(gids)] = gids
+        st = self.store
+        key = (n_pad, st.capacity)
+        fn = self._delete_fns.get(key)
+        if fn is None:
+            fn = self._delete_fns[key] = self._make_delete_fn(
+                n_pad, st.capacity)
+        nv, hits, load = fn(jnp.asarray(padded), st.valid, st.gid)
+        self.store = dataclasses.replace(st, valid=nv)
+        n_deleted = int(np.asarray(hits).sum())
+        self._shard_load = np.asarray(load).astype(np.int64)
+        self._n_live -= n_deleted
+        return DeleteResult(n_deleted=n_deleted,
+                            shard_load=np.asarray(load))
+
+    # ------------------------------------------------------------------
+    # Build: thin wrapper -- fresh store + one bulk insert
+    # ------------------------------------------------------------------
+    def build(self, data: jax.Array,
+              capacity: Optional[int] = None) -> BuildResult:
+        """(Re)build the index from scratch: reset the store, route every
+        data point to its home shard and store it.
+
+        Args:
+          data: (n, d) global array; will be sharded over the mesh axis.
+          capacity: optional per-shard append-region pre-reservation (rows)
+            for a stream that will keep growing after the build.
+        """
+        n = data.shape[0]
+        self._next_gid = 0
+        self.init_store(max(capacity or 0, self._store_capacity(n)))
+        self.insert(data)
+        return self.build_result
+
+    @property
+    def build_result(self) -> Optional[BuildResult]:
+        """Compatibility view of the streaming store."""
+        if self.store is None:
+            return None
+        st = self.store
+        return BuildResult(
+            store_x=st.x, store_packed=st.packed, store_gid=st.gid,
+            store_valid=st.valid, data_load=self._shard_load,
+            drops=self._drops)
+
+    @property
+    def n_live(self) -> int:
+        """Live (inserted and not deleted) rows in the store."""
+        return self._n_live
+
+    @property
+    def shard_load(self) -> np.ndarray:
+        """Live stored rows per shard (the paper's load-balance metric)."""
+        return np.asarray(self._shard_load)
+
+    # ------------------------------------------------------------------
+    # Query
+    # ------------------------------------------------------------------
+    def _make_query_fn(self, m: int, cap: int, Cq: int, donate: bool):
+        cfg, params, base_key = self.cfg, self.params, self.base_key
+        S, L = cfg.n_shards, cfg.L
+        axis = self.axis
         cr2 = jnp.float32((cfg.c * cfg.r) ** 2)
+        use_kernel = self.use_kernel
 
         def offsets_of(qid, q):
             return query_offsets(base_key, qid, q, L, cfg.r)
@@ -278,7 +528,7 @@ class DistributedLSHIndex:
             probe = mine & firstocc                            # (R, L)
 
             # ---- bucket search (Fig 3.2 Reduce body) ----
-            if self.use_kernel:
+            if use_kernel:
                 from repro.kernels import ops as kops
                 qb = jax.lax.bitcast_convert_type(
                     rpacked, jnp.int32).reshape(rpacked.shape[0], -1)
@@ -327,16 +577,38 @@ class DistributedLSHIndex:
                     fq_local[None], recv_load[None], drops[None])
 
         spec = P(axis)
-        fn = jax.jit(jax.shard_map(
+        return jax.jit(shard_map(
             query_shard, mesh=self.mesh,
-            in_specs=(spec, spec, spec, spec, spec, spec),
-            out_specs=(spec, spec, spec, spec, spec, spec),
+            in_specs=(spec,) * 6, out_specs=(spec,) * 6,
             check_vma=False,   # pallas out_shape has no vma annotation
-        ))
+        ), donate_argnums=(0,) if donate else ())
+
+    def query(self, queries: jax.Array, donate: bool = False) -> QueryResult:
+        """Answer a batch of queries (m, d), m divisible by n_shards.
+
+        donate=True donates the query buffer to the compiled executable
+        (serving front-ends stage queries into a scratch buffer that is
+        dead after the call -- avoids one device copy per flush).
+        """
+        if self.store is None:
+            raise RuntimeError("call build() or insert() first")
+        cfg = self.cfg
+        S = cfg.n_shards
+        m = queries.shape[0]
+        if m % S:
+            raise ValueError(f"m={m} must divide by n_shards={S}")
+        m_loc = m // S
+        Cq = self._query_capacity(m_loc)
+        st = self.store
+
+        key = (m, st.capacity, Cq, donate)
+        fn = self._query_fns.get(key)
+        if fn is None:
+            fn = self._query_fns[key] = self._make_query_fn(
+                m, st.capacity, Cq, donate)
         qids = jnp.arange(m, dtype=jnp.int32)
         gbest, ggid, gemit, fq, load, drops = fn(
-            queries, qids, br.store_x, br.store_packed, br.store_gid,
-            br.store_valid)
+            queries, qids, st.x, st.packed, st.gid, st.valid)
         # every shard computed the same global (m,) buffers; take shard 0
         gbest = np.asarray(gbest)[0]
         ggid = np.asarray(ggid)[0]

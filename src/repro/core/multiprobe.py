@@ -19,7 +19,6 @@ n_probes <= 2k regime.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

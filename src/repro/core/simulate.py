@@ -9,7 +9,6 @@ and the Fig 4.1 shuffle-size curves quickly on one host.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -124,6 +123,103 @@ def simulate(cfg: LSHConfig, data: jax.Array, queries: jax.Array,
         report.recall = rec
         report.results_emitted = emitted
     return report
+
+
+@dataclasses.dataclass
+class StreamReport:
+    """Steady-state accounting for a streaming insert+query mix.
+
+    The paper's two figures of merit (shuffle size, max reducer load)
+    measured in the serving regime: the index grows online while query
+    buckets flush against the current store, so load balance and traffic
+    are trajectories, not single numbers.
+    """
+    scheme: str
+    n_shards: int
+    steps: int
+    total_inserted: int
+    total_queries: int
+    # ---- traffic (per step: live routed rows) ----
+    query_rows_per_step: np.ndarray    # (steps,)
+    insert_rows_per_step: np.ndarray   # (steps,)
+    fq_mean: float                     # rows/query over the whole stream
+    # ---- load balance trajectories (max/avg skew per step) ----
+    data_skew: np.ndarray              # (steps,) store skew after insert
+    query_skew: np.ndarray             # (steps,) query-shard skew per step
+    data_load_final: np.ndarray        # (S,) live rows at end of stream
+
+    @property
+    def data_skew_final(self) -> float:
+        avg = max(float(self.data_load_final.mean()), 1.0)
+        return float(self.data_load_final.max()) / avg
+
+    def summary(self) -> str:
+        return (f"scheme={self.scheme} shards={self.n_shards} "
+                f"steps={self.steps} inserted={self.total_inserted} "
+                f"queries={self.total_queries} "
+                f"rows/query={self.fq_mean:.2f} "
+                f"data skew final={self.data_skew_final:.2f} "
+                f"(per-step max {self.data_skew.max():.2f}) "
+                f"query skew mean={self.query_skew.mean():.2f}")
+
+
+def simulate_stream(cfg: LSHConfig, data: jax.Array, queries: jax.Array,
+                    n_prefix: int, insert_batch: int,
+                    query_batch: int) -> StreamReport:
+    """Analytic streaming mix: build on data[:n_prefix], then per step
+    insert the next ``insert_batch`` rows and answer ``query_batch``
+    queries (cycling through ``queries``) against the grown store.
+
+    Query ids restart per bucket -- exactly what the serving front-end's
+    pad-to-bucket flush does -- so per-step traffic matches the service.
+    """
+    sim = make_sim(cfg)
+    params, base_key = sim.params, sim.base_key
+    n = data.shape[0]
+    m_all = queries.shape[0]
+    S = cfg.n_shards
+
+    hk_data = hash_h(params, data, cfg.W)
+    data_shard = np.asarray(shard_of(params, cfg, hk_data))   # (n,)
+    load = np.bincount(data_shard[:n_prefix], minlength=S).astype(np.int64)
+
+    qids = jnp.arange(query_batch, dtype=jnp.int32)
+    steps = max(1, (n - n_prefix) // max(insert_batch, 1))
+    q_rows, i_rows, d_skew, q_skew = [], [], [], []
+    total_q = 0
+    fq_sum = 0.0
+    for t in range(steps):
+        lo = n_prefix + t * insert_batch
+        hi = min(n, lo + insert_batch)
+        load += np.bincount(data_shard[lo:hi], minlength=S)
+        i_rows.append(hi - lo)
+        d_skew.append(load.max() / max(load.mean(), 1.0))
+
+        sel = (np.arange(query_batch) + t * query_batch) % m_all
+        q = queries[jnp.asarray(sel)]
+        offs = batch_query_offsets(base_key, qids, q, cfg.L, cfg.r)
+        hk_off = hash_h(params, offs, cfg.W)
+        keys_off = shard_key(params, cfg, hk_off)
+        if cfg.scheme == Scheme.SIMPLE:
+            live = _dedupe_mask_packed(pack_buckets(params, hk_off))
+        else:
+            live = _dedupe_mask_2d(keys_off)
+        live_np = np.asarray(live)
+        dest_np = np.asarray(jnp.mod(keys_off, S).astype(jnp.int32))
+        qload = np.bincount(dest_np[live_np], minlength=S)
+        q_rows.append(int(live_np.sum()))
+        q_skew.append(qload.max() / max(qload.mean(), 1.0))
+        fq_sum += float(live_np.sum())
+        total_q += query_batch
+
+    return StreamReport(
+        scheme=cfg.scheme.value, n_shards=S, steps=steps,
+        total_inserted=int(sum(i_rows)), total_queries=total_q,
+        query_rows_per_step=np.asarray(q_rows),
+        insert_rows_per_step=np.asarray(i_rows),
+        fq_mean=fq_sum / max(total_q, 1),
+        data_skew=np.asarray(d_skew), query_skew=np.asarray(q_skew),
+        data_load_final=load)
 
 
 def _exact_search_recall(cfg: LSHConfig, params: HashParams,

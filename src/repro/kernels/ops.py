@@ -8,8 +8,6 @@ sharded lowering.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

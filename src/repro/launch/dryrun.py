@@ -19,7 +19,6 @@ import json
 import time
 import traceback
 
-import jax
 
 from repro.configs import get_config, list_archs
 from repro.launch import hlo_analysis as ha

@@ -10,8 +10,6 @@ from __future__ import annotations
 import dataclasses
 import math
 import re
-from typing import Optional
-
 # TPU v5e-like hardware model (per chip)
 PEAK_FLOPS = 197e12          # bf16
 HBM_BW = 819e9               # bytes/s

@@ -22,8 +22,6 @@ This is a static cost model: per-device numbers for the SPMD module.
 from __future__ import annotations
 
 import dataclasses
-import json
-import math
 import re
 from typing import Dict, List, Optional, Tuple
 

@@ -12,9 +12,9 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import make_mesh
 from repro.configs import get_config
 from repro.core import Scheme
 from repro.models import init_params
@@ -37,8 +37,7 @@ def main(argv=None):
     cfg = get_config(args.arch, reduced=args.reduced)
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
     n_dev = len(jax.devices())
-    mesh = jax.make_mesh((n_dev,), ("shard",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((n_dev,), ("shard",))
 
     key = jax.random.PRNGKey(1)
     doc_tokens = jax.random.randint(key, (args.docs, 32), 0, cfg.vocab)
@@ -52,20 +51,22 @@ def main(argv=None):
           f"load max/avg={br.data_load.max() / max(br.data_load.mean(), 1):.1f}, "
           f"drops={br.drops}")
 
-    lat, rows = [], 0
+    lat = []
     for b in range(args.batches):
         kq = jax.random.fold_in(jax.random.PRNGKey(2), b)
         src = jax.random.randint(kq, (args.batch_size,), 0, args.docs)
         qtok = doc_tokens[src]
         t0 = time.monotonic()
-        gids, dists, res = svc.query(qtok)
+        gids, dists, handles = svc.query(qtok)
         lat.append(time.monotonic() - t0)
-        rows += int(res.fq.sum())
-        assert res.drops == 0
+    st = svc.service.stats
+    assert st.drops == 0
     n = args.batches * args.batch_size
     print(f"[serve] {n} queries: p50 batch latency "
-          f"{np.median(lat) * 1e3:.0f}ms, rows/query {rows / n:.2f} "
+          f"{np.median(lat) * 1e3:.0f}ms, rows/query "
+          f"{st.routed_rows / max(st.queries, 1):.2f} "
           f"(simple-LSH would ship ~{args.L}), scheme={args.scheme}")
+    print(f"[serve] {st.summary()}")
 
 
 if __name__ == "__main__":

@@ -20,10 +20,8 @@ import re
 from typing import Any, Optional
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.launch.mesh import data_axes
 from repro.models.config import ModelConfig
 
 # (path regex, trailing-dim axes). Params are TP-sharded on "model" only

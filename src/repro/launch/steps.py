@@ -5,7 +5,6 @@ the dry-run lowers these without allocating anything.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Optional
 
 import jax
@@ -14,8 +13,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import optim
 from repro.launch import sharding as shd
-from repro.launch.mesh import data_axes
-from repro.models import (decode_step, forward, init_cache, init_params,
+from repro.models import (decode_step, init_cache, init_params,
                           loss_fn, prefill)
 from repro.models import pspec
 from repro.models.config import ModelConfig

@@ -10,27 +10,23 @@ checkpoint/restart) on whatever devices exist; the same step builder the
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import optim
+from repro.compat import make_mesh
 from repro.configs import get_config
 from repro.data import TokenPipeline
 from repro.data.pipeline import PipelineState
-from repro.launch import sharding as shd
 from repro.models import init_params, loss_fn, pspec
 from repro.runtime import FaultConfig, run
 
 
 def make_local_mesh():
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((n, 1), ("data", "model"))
 
 
 def main(argv=None):

@@ -15,8 +15,6 @@ KV cache layouts:
 from __future__ import annotations
 
 import math
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Optional, Sequence
+from typing import Optional
 
 import jax.numpy as jnp
 

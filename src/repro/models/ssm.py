@@ -8,7 +8,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops, ref
+from repro.kernels import ops
 from repro.models.config import ModelConfig
 from repro.models.layers import causal_conv1d, he_init, init_conv1d
 

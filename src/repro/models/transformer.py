@@ -7,9 +7,6 @@ time -- is O(1) in depth.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -7,8 +7,7 @@ sharding falls out of the param partitioning rules for free.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -19,8 +19,6 @@ import dataclasses
 import time
 from typing import Any, Callable, Optional
 
-import jax
-import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt_lib
 

@@ -1,2 +1,6 @@
 from repro.serving.retrieval import RetrievalService, embed_texts
-__all__ = ["RetrievalService", "embed_texts"]
+from repro.serving.service import (PendingQuery, ServiceStats,
+                                   ShardedLSHService)
+
+__all__ = ["RetrievalService", "embed_texts", "ShardedLSHService",
+           "ServiceStats", "PendingQuery"]

@@ -3,8 +3,11 @@
 This is the paper's workload with the model zoo as the feature extractor:
   index build: embed documents -> DistributedLSHIndex.build (one routed
                row per doc, Fig 3.2 preprocessing);
-  query:       embed query -> entropy offsets -> Layered-LSH route ->
-               per-shard bucket search -> (c,r)-NN results.
+  streaming:   embed new documents -> ShardedLSHService.insert (routed
+               append into the per-shard regions);
+  query:       embed query -> ShardedLSHService micro-batch -> entropy
+               offsets -> Layered-LSH route -> per-shard bucket search
+               -> (c,r)-NN results.
 
 Embeddings are mean-pooled final hidden states, l2-normalised (so the
 paper's Wiki/Image unit-norm setting applies directly).
@@ -12,18 +15,16 @@ paper's Wiki/Image unit-norm setting applies directly).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import DistributedLSHIndex, LSHConfig, Scheme
-from repro.models import forward
 from repro.models.config import ModelConfig
 from repro.models.layers import embed as embed_tokens
 from repro.models.transformer import _apply_segment  # reuse blocks
-from repro.models import transformer as tfm
+from repro.serving.service import ShardedLSHService
 
 
 def embed_texts(params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
@@ -44,21 +45,42 @@ class RetrievalService:
     lsh: LSHConfig
     params: dict
     index: DistributedLSHIndex
+    service: ShardedLSHService
 
     @classmethod
     def build(cls, cfg: ModelConfig, params, doc_tokens, mesh,
               r: float = 0.25, c: float = 2.0, k: int = 10, L: int = 16,
               W: float = 1.0, scheme: Scheme = Scheme.LAYERED,
-              seed: int = 0):
+              seed: int = 0, use_kernel: bool = False,
+              bucket_size: int = 64, max_latency_ms: float = 25.0):
         docs = embed_texts(params, cfg, doc_tokens)
         lsh = LSHConfig(d=int(docs.shape[1]), k=k, W=W, r=r, c=c, L=L,
                         n_shards=mesh.shape["shard"], scheme=scheme,
                         seed=seed)
-        index = DistributedLSHIndex(lsh, mesh)
+        index = DistributedLSHIndex(lsh, mesh, use_kernel=use_kernel)
         index.build(docs)
-        return cls(cfg=cfg, lsh=lsh, params=params, index=index)
+        service = ShardedLSHService(index, bucket_size=bucket_size,
+                                    max_latency_ms=max_latency_ms)
+        return cls(cfg=cfg, lsh=lsh, params=params, index=index,
+                   service=service)
 
-    def query(self, query_tokens) -> tuple[np.ndarray, np.ndarray, object]:
+    def insert_docs(self, doc_tokens) -> "np.ndarray":
+        """Embed and stream new documents into the index; returns gids."""
+        docs = embed_texts(self.params, self.cfg, doc_tokens)
+        res = self.service.insert(docs)
+        if res.drops:
+            # dropped rows are not the trailing ones, so the gid->doc
+            # attribution below would silently lie -- refuse instead
+            raise RuntimeError(
+                f"insert overflow: {res.drops} of {docs.shape[0]} docs "
+                f"dropped (store capacity {res.capacity}/shard)")
+        return np.arange(res.gid_start, res.gid_start + res.n_inserted)
+
+    def query(self, query_tokens) -> tuple[np.ndarray, np.ndarray, list]:
+        """Embed a batch of queries and answer through the micro-batcher."""
         q = embed_texts(self.params, self.cfg, query_tokens)
-        res = self.index.query(q)
-        return res.best_gid, res.best_dist, res
+        handles = self.service.submit_batch(np.asarray(q))
+        self.service.drain()
+        gids = np.asarray([h.gid for h in handles])
+        dists = np.asarray([h.dist for h in handles])
+        return gids, dists, handles

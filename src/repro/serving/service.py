@@ -1,0 +1,219 @@
+"""Batched serving front-end for the streaming distributed LSH index.
+
+The paper's serving posture is a continuous query stream from many users,
+not a one-shot batch job.  ``ShardedLSHService`` turns the shard_map index
+into that service:
+
+  * micro-batching -- incoming queries accumulate into a fixed-size
+    bucket (pad-to-bucket, so every flush reuses ONE compiled executable)
+    and flush when the bucket fills, when a max-latency deadline expires,
+    or on explicit ``flush()``/``drain()``;
+  * donated buffers -- the staging buffer handed to the compiled query
+    step is dead after the call, so it is donated (no copy per flush);
+  * streaming writes -- ``insert``/``delete`` route straight through the
+    index's all_to_all append/tombstone path with capacity accounting;
+  * accounting -- per-flush latency, occupancy, routed rows and overflow
+    drops accumulate into ``ServiceStats`` (the serving-regime view of the
+    paper's network-cost metric).
+
+The front-end is synchronous and deterministic (no threads): deadlines
+are checked on entry to ``submit``/``submit_batch``, which is the natural
+spot in a polling serve loop and keeps results reproducible in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.index import DeleteResult, DistributedLSHIndex, InsertResult
+
+
+@dataclasses.dataclass
+class PendingQuery:
+    """Handle for one submitted query; resolved when its bucket flushes."""
+    _service: "ShardedLSHService"
+    done: bool = False
+    gid: int = -1                 # global id of best (c,r)-NN (IMAX if none)
+    dist: float = float("inf")   # distance of best candidate
+    n_within_cr: int = 0          # candidates within cr across all shards
+    fq: int = 0                   # routed rows (Definition 7)
+
+    def result(self) -> "PendingQuery":
+        """Block until resolved (forces a flush of the owning bucket)."""
+        while not self.done:
+            self._service.flush(reason="manual")
+        return self
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    queries: int = 0              # queries answered
+    batches: int = 0              # buckets flushed
+    flush_full: int = 0           # flushes triggered by a full bucket
+    flush_deadline: int = 0       # flushes triggered by the latency SLO
+    flush_manual: int = 0         # explicit flush()/drain()/result()
+    pad_rows: int = 0             # padding rows shipped (bucket - live)
+    inserts: int = 0              # rows inserted
+    insert_batches: int = 0
+    deletes: int = 0              # rows tombstoned
+    drops: int = 0                # capacity overflow anywhere (must stay 0)
+    routed_rows: int = 0          # live query rows shipped (network cost)
+    query_time_s: float = 0.0     # wall time inside flushed query steps
+    insert_time_s: float = 0.0
+
+    @property
+    def occupancy(self) -> float:
+        """Live fraction of shipped query rows (1.0 = no padding waste)."""
+        total = self.queries + self.pad_rows
+        return self.queries / total if total else 0.0
+
+    @property
+    def queries_per_s(self) -> float:
+        return self.queries / self.query_time_s if self.query_time_s else 0.0
+
+    @property
+    def inserts_per_s(self) -> float:
+        return self.inserts / self.insert_time_s if self.insert_time_s \
+            else 0.0
+
+    def summary(self) -> str:
+        return (f"queries={self.queries} batches={self.batches} "
+                f"(full={self.flush_full} deadline={self.flush_deadline} "
+                f"manual={self.flush_manual}) occupancy={self.occupancy:.2f} "
+                f"qps={self.queries_per_s:.0f} "
+                f"inserts={self.inserts} ips={self.inserts_per_s:.0f} "
+                f"rows/query="
+                f"{self.routed_rows / max(self.queries, 1):.2f} "
+                f"drops={self.drops}")
+
+
+class ShardedLSHService:
+    """Micro-batching query/insert front-end over a DistributedLSHIndex."""
+
+    def __init__(self, index: DistributedLSHIndex, bucket_size: int = 64,
+                 max_latency_ms: float = 25.0):
+        S = index.cfg.n_shards
+        if bucket_size % S:
+            raise ValueError(
+                f"bucket_size={bucket_size} must divide by n_shards={S}")
+        self.index = index
+        self.bucket_size = bucket_size
+        self.max_latency_ms = max_latency_ms
+        self.stats = ServiceStats()
+        self._pending: List[PendingQuery] = []
+        self._pending_q: List[np.ndarray] = []
+        self._deadline: Optional[float] = None
+
+    # ------------------------------------------------------------------
+    # Queries
+    # ------------------------------------------------------------------
+    def submit(self, q) -> PendingQuery:
+        """Enqueue one (d,) query; flushes full buckets / missed deadlines."""
+        return self.submit_batch(np.asarray(q, np.float32)[None])[0]
+
+    def submit_batch(self, qs) -> List[PendingQuery]:
+        """Enqueue (b, d) queries, preserving submission order."""
+        qs = np.asarray(qs, np.float32)
+        if qs.ndim != 2 or qs.shape[1] != self.index.cfg.d:
+            raise ValueError(f"queries must be (b, {self.index.cfg.d}), "
+                             f"got {qs.shape}")
+        self._check_deadline()
+        handles = []
+        for row in qs:
+            h = PendingQuery(_service=self)
+            self._pending.append(h)
+            self._pending_q.append(row)
+            handles.append(h)
+            if self._deadline is None:
+                self._deadline = (time.monotonic()
+                                  + self.max_latency_ms / 1e3)
+            if len(self._pending) >= self.bucket_size:
+                self.flush(reason="full")
+        return handles
+
+    def _check_deadline(self) -> None:
+        if (self._pending and self._deadline is not None
+                and time.monotonic() >= self._deadline):
+            self.flush(reason="deadline")
+
+    def flush(self, reason: str = "manual") -> int:
+        """Answer up to one bucket of pending queries; returns the count."""
+        if reason not in ("full", "deadline", "manual"):
+            raise ValueError(f"unknown flush reason {reason!r}")
+        if not self._pending:
+            self._deadline = None
+            return 0
+        take = min(len(self._pending), self.bucket_size)
+        handles = self._pending[:take]
+        rows = self._pending_q[:take]
+        del self._pending[:take], self._pending_q[:take]
+        self._deadline = (time.monotonic() + self.max_latency_ms / 1e3
+                          if self._pending else None)
+
+        pad = self.bucket_size - take
+        # staging buffer: fresh per flush and dead after -- donated
+        buf = np.zeros((self.bucket_size, self.index.cfg.d), np.float32)
+        buf[:take] = rows
+        t0 = time.monotonic()
+        res = self.index.query(jnp.asarray(buf), donate=True)
+        dt = time.monotonic() - t0
+
+        for i, h in enumerate(handles):
+            h.gid = int(res.best_gid[i])
+            h.dist = float(res.best_dist[i])
+            h.n_within_cr = int(res.n_within_cr[i])
+            h.fq = int(res.fq[i])
+            h.done = True
+
+        st = self.stats
+        st.queries += take
+        st.batches += 1
+        st.pad_rows += pad
+        st.drops += res.drops
+        # padded rows still route (their offsets are hashed), so count
+        # only the live rows as the paper's shuffle size
+        st.routed_rows += int(res.fq[:take].sum())
+        st.query_time_s += dt
+        setattr(st, f"flush_{reason}", getattr(st, f"flush_{reason}") + 1)
+        return take
+
+    def drain(self) -> int:
+        """Flush until no queries are pending; returns the total answered."""
+        total = 0
+        while self._pending:
+            total += self.flush(reason="manual")
+        return total
+
+    @property
+    def n_pending(self) -> int:
+        return len(self._pending)
+
+    # ------------------------------------------------------------------
+    # Streaming writes
+    # ------------------------------------------------------------------
+    def insert(self, points, gids=None) -> InsertResult:
+        """Route a batch of new points into the sharded store."""
+        self._check_deadline()   # writes must not starve pending queries
+        t0 = time.monotonic()
+        res = self.index.insert(points, gids=gids)
+        self.stats.insert_time_s += time.monotonic() - t0
+        self.stats.inserts += res.n_inserted
+        self.stats.insert_batches += 1
+        self.stats.drops += res.drops
+        return res
+
+    def delete(self, gids) -> DeleteResult:
+        """Tombstone rows by global id."""
+        self._check_deadline()
+        res = self.index.delete(gids)
+        self.stats.deletes += res.n_deleted
+        return res
+
+    # ------------------------------------------------------------------
+    def shard_load(self) -> np.ndarray:
+        """Live stored rows per shard (the paper's load-balance metric)."""
+        return self.index.shard_load

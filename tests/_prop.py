@@ -1,0 +1,86 @@
+"""Property-test shim: real hypothesis when installed, minimal fallback
+otherwise.
+
+CI installs hypothesis (requirements-dev.txt) and gets the real engine --
+shrinking, the example database, coverage-guided generation.  Hermetic
+containers without it still COLLECT and RUN the property tests against a
+deterministic pseudo-random sample of the strategy space instead of
+erroring at import time.
+
+The fallback implements exactly the surface this repo uses:
+  given, settings(max_examples=, deadline=), st.integers, st.floats,
+  st.sampled_from, st.booleans.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import functools
+    import random
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: elements[
+                rng.randrange(len(elements))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+    st = _St()
+
+    _MAX_EXAMPLES = 100
+
+    def settings(max_examples: int = _MAX_EXAMPLES, deadline=None, **_kw):
+        def wrap(fn):
+            fn._prop_max_examples = max_examples
+            return fn
+        return wrap
+
+    def given(*strategies):
+        def wrap(fn):
+            @functools.wraps(fn)
+            def runner(*args, **kwargs):
+                # read from runner: @settings may sit above @given
+                n = getattr(runner, "_prop_max_examples", _MAX_EXAMPLES)
+                # deterministic per-test seed: stable across runs (str
+                # hash() is randomised per process, crc32 is not)
+                rng = random.Random(zlib.crc32(
+                    fn.__qualname__.encode()))
+                for i in range(n):
+                    drawn = tuple(s.example(rng) for s in strategies)
+                    try:
+                        fn(*args, *drawn, **kwargs)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"property falsified on example {i}: "
+                            f"args={drawn!r}") from e
+            # @settings may be applied above or below @given
+            runner._prop_max_examples = getattr(
+                fn, "_prop_max_examples", _MAX_EXAMPLES)
+            # hide the drawn params from pytest's fixture resolution
+            del runner.__wrapped__
+            return runner
+        return wrap

@@ -10,6 +10,9 @@ from repro.configs import get_config, list_archs
 from repro.models import (decode_step, forward, init_cache, init_params,
                           loss_fn, prefill)
 
+# ~2 min across the whole zoo: nightly lane, not the CI fast lane
+pytestmark = pytest.mark.slow
+
 B, S = 2, 32
 
 

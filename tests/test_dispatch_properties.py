@@ -4,7 +4,7 @@ MoE expert dispatch."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core.index import dispatch_slots, scatter_rows
 

@@ -12,6 +12,10 @@ import textwrap
 
 import pytest
 
+# ~3 min of subprocess mesh work: nightly full-suite lane, not the CI
+# fast lane (test_streaming_index covers the routed index there)
+pytestmark = [pytest.mark.slow, pytest.mark.multidevice]
+
 _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -28,6 +32,7 @@ def _run(script: str) -> str:
 COMMON = """
 import jax, numpy as np
 import jax.numpy as jnp
+from repro.compat import make_mesh
 from repro.core import LSHConfig, Scheme, simulate, DistributedLSHIndex
 from repro.data import planted_random
 
@@ -36,8 +41,7 @@ def make(scheme, **kw):
                 scheme=scheme, seed=0)
     base.update(kw)
     cfg = LSHConfig(**base)
-    mesh = jax.make_mesh((8,), ("shard",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("shard",))
     return cfg, DistributedLSHIndex(cfg, mesh)
 
 data, queries, planted = planted_random(n=2048, m=256, d=50, r=0.3, seed=0)
@@ -112,8 +116,7 @@ from repro.core import DistributedLSHIndex
 cfg, idx = make(Scheme.LAYERED, L=16)
 idx.build(data)
 r_jnp = idx.query(queries)
-mesh = jax.make_mesh((8,), ("shard",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("shard",))
 idx_k = DistributedLSHIndex(cfg, mesh, use_kernel=True)
 idx_k.build(data)
 r_k = idx_k.query(queries)

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core import LSHConfig, Scheme, simulate
 from repro.core.hashing import hash_h, sample_params
@@ -125,7 +125,10 @@ def test_moe_capacity_and_combine_invariants(seed, dims):
     x = jax.random.normal(jax.random.fold_in(key, 1), (1, T, 16)) * 0.5
     y, aux = moe_mlp(p, cfg, x)
     assert np.isfinite(np.asarray(y)).all()
-    assert float(aux) >= 0.99  # Switch aux >= 1 at perfect balance
+    # Switch aux == 1 at perfect balance IN EXPECTATION; with T*K as low
+    # as 16 assignments the sampled f_e/P_e anticorrelate below 1 (seen:
+    # 0.987), while expert collapse sits near E -- 0.9 separates cleanly
+    assert float(aux) >= 0.9
 
     # re-derive routing to check capacity accounting
     logits = np.asarray(x.reshape(T, 16) @ p["router"])
@@ -136,6 +139,8 @@ def test_moe_capacity_and_combine_invariants(seed, dims):
     assert kept.max() <= C
 
 
+@pytest.mark.slow
+@pytest.mark.multidevice
 def test_moe_grouped_equals_ungrouped():
     """The grouped dispatch (G>1) must agree with G=1 when no token is
     dropped (high capacity) -- grouping is a layout choice, not math.
@@ -159,8 +164,8 @@ key = jax.random.PRNGKey(3)
 p = init_moe(key, cfg)
 x = jax.random.normal(jax.random.fold_in(key, 1), (4, 8, 16)) * 0.5
 y1, _ = moe_mlp(p, cfg, x)           # pspec inactive -> G=1
-mesh = jax.make_mesh((4, 1), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.compat import make_mesh
+mesh = make_mesh((4, 1), ("data", "model"))
 try:
     pspec.set_axes(("data",), "model", dp=4, tp=1)
     with mesh:
@@ -184,6 +189,8 @@ print("OK")
 # Elastic checkpoint re-shard (save on 4-dev mesh, restore on 8-dev mesh)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
+@pytest.mark.multidevice
 def test_elastic_reshard_roundtrip(tmp_path):
     script = f"""
 import os
@@ -195,15 +202,14 @@ from repro.checkpoint import restore, save
 
 tree = {{"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
         "b": jnp.ones((16,), jnp.bfloat16)}}
-mesh4 = jax.make_mesh((4,), ("data",),
-                      axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh
+mesh4 = make_mesh((4,), ("data",))
 sh4 = {{"w": NamedSharding(mesh4, P("data", None)),
        "b": NamedSharding(mesh4, P("data"))}}
 placed = jax.tree.map(jax.device_put, tree, sh4)
 save("{tmp_path}", 1, placed)
 
-mesh8 = jax.make_mesh((8,), ("data",),
-                      axis_types=(jax.sharding.AxisType.Auto,))
+mesh8 = make_mesh((8,), ("data",))
 sh8 = {{"w": NamedSharding(mesh8, P(None, "data")),
        "b": NamedSharding(mesh8, P("data"))}}
 got, step, _ = restore("{tmp_path}", tree, shardings=sh8)

@@ -1,0 +1,209 @@
+"""Streaming-index + serving front-end tests (subprocess, 8 host devices).
+
+The acceptance contract for the streaming refactor:
+  * build(data) and build(data[:n/2]) + insert(data[n/2:]) answer queries
+    IDENTICALLY with zero dispatch-overflow drops;
+  * delete() tombstones are honoured by the bucket scan and the slots are
+    reused by later inserts;
+  * ShardedLSHService micro-batches a mixed insert/query stream and, at
+    steady state, matches a one-shot build served the same way.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+pytestmark = pytest.mark.multidevice
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(script: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(_REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    return out.stdout
+
+
+COMMON = """
+import jax, numpy as np
+import jax.numpy as jnp
+from repro.compat import make_mesh
+from repro.core import LSHConfig, Scheme, DistributedLSHIndex
+from repro.data import planted_random
+
+cfg = LSHConfig(d=50, k=10, W=1.2, r=0.3, c=2.0, L=16, n_shards=8,
+                scheme=Scheme.LAYERED, seed=0)
+mesh = make_mesh((8,), ("shard",))
+data, queries, planted = planted_random(n=2048, m=256, d=50, r=0.3, seed=0)
+data, queries = jnp.asarray(data), jnp.asarray(queries)
+"""
+
+
+def test_build_insert_equivalence():
+    """build(data) vs build(data[:n/2]) + insert(data[n/2:]): identical
+    query answers on a small mesh, zero dispatch overflow drops."""
+    out = _run(COMMON + """
+idx = DistributedLSHIndex(cfg, mesh)
+br = idx.build(data)
+qr = idx.query(queries)
+
+idx2 = DistributedLSHIndex(cfg, mesh)
+idx2.build(data[:1024])
+ir = idx2.insert(data[1024:])
+qr2 = idx2.query(queries)
+
+assert br.drops == 0 and qr.drops == 0
+assert ir.drops == 0 and qr2.drops == 0
+assert ir.n_inserted == 1024
+np.testing.assert_array_equal(qr2.best_gid, qr.best_gid)
+np.testing.assert_allclose(qr2.best_dist, qr.best_dist, rtol=1e-6)
+np.testing.assert_array_equal(qr2.n_within_cr, qr.n_within_cr)
+np.testing.assert_array_equal(qr2.fq, qr.fq)
+# the same rows live on the same shards regardless of arrival order
+np.testing.assert_array_equal(idx2._shard_load, br.data_load)
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_incremental_inserts_odd_batches():
+    """Odd-sized insert batches (padding path) grow the store cleanly."""
+    out = _run(COMMON + """
+idx = DistributedLSHIndex(cfg, mesh)
+idx.build(data)
+qr = idx.query(queries)
+
+idx2 = DistributedLSHIndex(cfg, mesh)
+idx2.build(data[:512])
+for lo, hi in ((512, 1149), (1149, 1150), (1150, 2048)):
+    r = idx2.insert(data[lo:hi])
+    assert r.drops == 0 and r.n_inserted == hi - lo, (lo, hi, r)
+assert idx2.n_live == 2048
+qr2 = idx2.query(queries)
+np.testing.assert_array_equal(qr2.best_gid, qr.best_gid)
+np.testing.assert_allclose(qr2.best_dist, qr.best_dist, rtol=1e-6)
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_delete_tombstone_and_slot_reuse():
+    """Deleted gids never come back from the bucket scan; their slots are
+    reused by later inserts (store capacity does not leak)."""
+    out = _run(COMMON + """
+idx = DistributedLSHIndex(cfg, mesh)
+idx.build(data)
+qr = idx.query(queries)
+hit_gids = np.unique(qr.best_gid[np.isfinite(qr.best_dist)])
+victims = hit_gids[:20]
+
+dr = idx.delete(victims)
+assert dr.n_deleted == len(victims)
+assert idx.n_live == 2048 - len(victims)
+qr2 = idx.query(queries)
+assert not np.isin(qr2.best_gid, victims).any()
+# answers for queries whose best was untouched are unchanged
+keep = ~np.isin(qr.best_gid, victims)
+np.testing.assert_allclose(qr2.best_dist[keep], qr.best_dist[keep],
+                           rtol=1e-6)
+
+# re-insert the same points (fresh gids): slots are reused, not appended
+cap_before = idx.store.capacity
+r = idx.insert(data[np.asarray(victims)])
+assert r.drops == 0 and idx.store.capacity == cap_before
+assert idx.n_live == 2048
+qr3 = idx.query(queries)
+assert np.isfinite(qr3.best_dist).sum() == np.isfinite(qr.best_dist).sum()
+# double delete of a missing gid is a no-op
+assert idx.delete(victims).n_deleted == 0
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_service_mixed_stream_matches_batch():
+    """ShardedLSHService: mixed insert/query stream with zero drops; at
+    steady state the streamed store answers exactly like a one-shot build
+    served through an identical front-end."""
+    out = _run(COMMON + """
+from repro.serving import ShardedLSHService
+idx = DistributedLSHIndex(cfg, mesh, use_kernel=True)
+idx.build(data[:1024])
+svc = ShardedLSHService(idx, bucket_size=64, max_latency_ms=50.0)
+
+svc.submit_batch(np.asarray(queries[:100]))   # 1 full flush, 36 pending
+svc.insert(data[1024:1536])
+for i in range(28):                           # 64 pending -> full flush
+    svc.submit(np.asarray(queries[100 + i]))
+svc.insert(data[1536:2048])
+svc.submit_batch(np.asarray(queries[128:]))
+svc.drain()
+st = svc.stats
+assert st.drops == 0, st.summary()
+assert st.queries == 256 and st.inserts == 1024
+assert st.flush_full >= 2 and st.batches >= 4
+assert 0 < st.occupancy <= 1
+
+full = DistributedLSHIndex(cfg, mesh, use_kernel=True)
+full.build(data)
+svc2 = ShardedLSHService(full, bucket_size=64, max_latency_ms=50.0)
+h1 = svc.submit_batch(np.asarray(queries)); svc.drain()
+h2 = svc2.submit_batch(np.asarray(queries)); svc2.drain()
+np.testing.assert_array_equal([h.gid for h in h1], [h.gid for h in h2])
+np.testing.assert_allclose([h.dist for h in h1], [h.dist for h in h2],
+                           rtol=1e-5)
+assert all(h.done for h in h1)
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_service_deadline_flush():
+    """A missed latency deadline flushes a partial bucket on next entry."""
+    out = _run(COMMON + """
+import time
+from repro.serving import ShardedLSHService
+idx = DistributedLSHIndex(cfg, mesh)
+idx.build(data[:1024])
+svc = ShardedLSHService(idx, bucket_size=64, max_latency_ms=5.0)
+h = svc.submit(np.asarray(queries[0]))
+time.sleep(0.02)
+h2 = svc.submit(np.asarray(queries[1]))   # entry check fires the flush
+assert h.done and svc.stats.flush_deadline == 1
+assert not h2.done
+r = h2.result()                            # forces a manual flush
+assert h2.done and svc.stats.flush_manual >= 1
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_simulate_stream_matches_distributed_loads():
+    """Analytic streaming accounting agrees with the shard_map path on
+    final per-shard loads and rows/query."""
+    out = _run(COMMON + """
+from repro.core import simulate_stream
+from repro.serving import ShardedLSHService
+rep = simulate_stream(cfg, data, queries, n_prefix=1024,
+                      insert_batch=512, query_batch=64)
+idx = DistributedLSHIndex(cfg, mesh)
+idx.build(data[:1024], capacity=idx._store_capacity(2048))
+svc = ShardedLSHService(idx, bucket_size=64)
+for t in range(rep.steps):
+    svc.insert(data[1024 + t * 512: 1024 + (t + 1) * 512])
+    sel = (np.arange(64) + t * 64) % 256
+    svc.submit_batch(np.asarray(queries)[sel])
+    svc.drain()
+assert svc.stats.drops == 0
+np.testing.assert_array_equal(np.asarray(rep.data_load_final),
+                              svc.shard_load())
+assert abs(rep.fq_mean - svc.stats.routed_rows / svc.stats.queries) < 1e-6
+print("OK")
+""")
+    assert "OK" in out
