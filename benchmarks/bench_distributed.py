@@ -46,6 +46,28 @@ for scheme in (Scheme.SIMPLE, Scheme.LAYERED):
           f"{{int(qr.query_load.sum())}},{{cap_rows}}")
     assert qr.drops == 0 and br.drops == 0
 
+# ---- top-K retrieval: K-sweep latency curve + recall@K vs brute force ----
+from repro.core import lsh_topk_reference, nearest_neighbors, recall_at_k
+print("scheme,K,query_warm_ms,recall_at_K")
+cfg = LSHConfig(d=D, k=10, W=1.0, r=0.3, c=2.0, L=16, n_shards=8,
+                scheme=Scheme.LAYERED, seed=0)
+idx = DistributedLSHIndex(cfg, mesh)
+idx.build(data)
+_, true_idx = nearest_neighbors(np.asarray(data), np.asarray(queries), 32)
+for K in (1, 4, 10, 32):
+    idx.query(queries, k_neighbors=K)          # warm the K-specialised fn
+    t0 = time.monotonic()
+    qr = idx.query(queries, k_neighbors=K)
+    t_q = time.monotonic() - t0
+    rec = recall_at_k(qr.topk_gid, true_idx[:, :K])
+    print(f"layered,{{K}},{{t_q*1e3:.1f}},{{rec:.3f}}")
+# the distributed top-10 must equal the single-machine LSH reference
+refd, refg = lsh_topk_reference(cfg, data, queries, 10)
+qr10 = idx.query(queries, k_neighbors=10)
+agree = float((qr10.topk_gid == refg).mean())
+print(f"# top-10 gid agreement vs single-machine LSH reference: {{agree:.4f}}")
+assert agree == 1.0, agree
+
 # ---- streaming serving mix: grow the index while answering queries ----
 print("scheme,qps,ips,p50_ms,rows_per_query,load_skew,occupancy,drops")
 STEPS, INS, BUCKET = {steps}, {ins}, {bucket}

@@ -51,6 +51,12 @@ def main():
     flops = 2 * 512 * 4096 * 64
     rows.append(("bucket_search_512x4096", t * 1e6, f"tpu_us={flops/PEAK*1e6:.2f}"))
 
+    # top-K variant: same scan, K=16 accumulator (the serving path)
+    f = jax.jit(lambda *a: ref.bucket_search_ref(*a, 2.0, L=8, K=16))
+    t = _time(f, q, qsq, qb, probe, p, psq, pb, gid, pv)
+    rows.append(("bucket_search_topk16_512x4096", t * 1e6,
+                 f"tpu_us={flops/PEAK*1e6:.2f}"))
+
     # attention: B1 H8 S1024 dh64
     qq = jax.random.normal(key, (1, 8, 1024, 64), jnp.bfloat16)
     f = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v, causal=True))

@@ -13,7 +13,7 @@ from repro.core import LSHConfig, Scheme, simulate
 from repro.data import planted_random
 
 
-def run(n=8192, m=1024, ls=(8, 16, 32, 64)):
+def run(n=8192, m=1024, ls=(8, 16, 32, 64), k_at=10):
     data, queries, _ = planted_random(n=n, m=m, d=50, r=0.3, seed=0)
     data, queries = jnp.asarray(data), jnp.asarray(queries)
     rows = []
@@ -22,18 +22,20 @@ def run(n=8192, m=1024, ls=(8, 16, 32, 64)):
             cfg = LSHConfig(d=50, k=10, W=1.2, r=0.3, c=2.0, L=L,
                             n_shards=32, scheme=Scheme.LAYERED,
                             probes=probes, seed=0)
-            rep = simulate(cfg, data, queries, compute_recall=True)
+            rep = simulate(cfg, data, queries, compute_recall=True,
+                           k_neighbors=k_at)
             rows.append(dict(probes=probes, L=L, recall=rep.recall,
+                             recall_at_k=rep.recall_at_k,
                              fq=rep.fq_mean, rows=rep.query_rows))
     return rows
 
 
 def main():
     rows = run()
-    print("probes,L,recall,fq_mean,rows")
+    print("probes,L,recall,recall@10,fq_mean,rows")
     for r in rows:
         print(f"{r['probes']},{r['L']},{r['recall']:.3f},"
-              f"{r['fq']:.2f},{r['rows']}")
+              f"{r['recall_at_k']:.3f},{r['fq']:.2f},{r['rows']}")
     # claims: mplsh recall >= entropy at each L; traffic stays flat
     by = {(r["probes"], r["L"]): r for r in rows}
     fails = []

@@ -1,0 +1,81 @@
+"""CI benchmark-regression gate.
+
+Compares a fresh ``benchmarks.run --smoke --json`` artifact against the
+committed ``benchmarks/baseline_ci.json``:
+
+  PYTHONPATH=src python -m benchmarks.check_regression bench.json \
+      --baseline benchmarks/baseline_ci.json --threshold 1.5
+
+A bench FAILS when its wall time exceeds threshold x baseline.  The
+threshold is deliberately generous (default 1.5x): shared CI runners are
+noisy, and the gate exists to catch real order-of-magnitude regressions
+(a retrace per step, an accidental O(R*N) materialisation), not 10%
+jitter.  Benches new in the current run pass with a note (refresh the
+baseline to start tracking them); benches that vanished fail, since a
+silently-dropped bench would hide a regression forever.
+
+To refresh after an intentional change:
+  PYTHONPATH=src python -m benchmarks.run --smoke --json \
+      benchmarks/baseline_ci.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# guards the ratio against meaninglessly tiny baselines (timer noise)
+MIN_BASELINE_S = 0.05
+
+
+def compare(current: dict, baseline: dict, threshold: float) -> list[str]:
+    """Returns a list of failure messages (empty = gate passes)."""
+    failures = []
+    cur, base = current["benches"], baseline["benches"]
+    print(f"{'bench':<28} {'base_s':>8} {'cur_s':>8} {'ratio':>6}  verdict")
+    for name in sorted(set(base) | set(cur)):
+        if name not in cur:
+            failures.append(f"{name}: present in baseline but not run")
+            print(f"{name:<28} {base[name]['wall_s']:>8.2f} {'--':>8} "
+                  f"{'--':>6}  MISSING")
+            continue
+        if name not in base:
+            print(f"{name:<28} {'--':>8} {cur[name]['wall_s']:>8.2f} "
+                  f"{'--':>6}  new (not gated)")
+            continue
+        b = max(base[name]["wall_s"], MIN_BASELINE_S)
+        c = cur[name]["wall_s"]
+        ratio = c / b
+        ok = ratio <= threshold
+        print(f"{name:<28} {b:>8.2f} {c:>8.2f} {ratio:>6.2f}  "
+              f"{'ok' if ok else 'REGRESSION'}")
+        if not ok:
+            failures.append(
+                f"{name}: {c:.2f}s vs baseline {b:.2f}s "
+                f"({ratio:.2f}x > {threshold}x)")
+    return failures
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="fresh --json artifact")
+    ap.add_argument("--baseline", default="benchmarks/baseline_ci.json")
+    ap.add_argument("--threshold", type=float, default=1.5)
+    args = ap.parse_args(argv)
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = compare(current, baseline, args.threshold)
+    if failures:
+        print("\nbenchmark gate FAILED:")
+        for msg in failures:
+            print("  -", msg)
+        print("(intentional change? refresh with: PYTHONPATH=src python -m"
+              " benchmarks.run --smoke --json benchmarks/baseline_ci.json)")
+        sys.exit(1)
+    print("\nbenchmark gate passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,14 +3,20 @@
   PYTHONPATH=src python -m benchmarks.run          # everything
   PYTHONPATH=src python -m benchmarks.run --fast   # skip the slow ones
   PYTHONPATH=src python -m benchmarks.run --smoke  # CI: tiny configs only
+  PYTHONPATH=src python -m benchmarks.run --smoke --json bench.json
 
 Prints ``name,us_per_call,derived`` CSV blocks per benchmark, then the
 paper-claim checks (skipped under --smoke: relative claims are only
 asserted at the default dataset scale).
+
+``--json`` additionally writes per-bench wall-time/throughput to a file;
+CI compares that against ``benchmarks/baseline_ci.json`` through
+``benchmarks.check_regression`` (see README "benchmark gate").
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -19,34 +25,79 @@ def _section(name):
     print(f"\n===== {name} =====")
 
 
-def smoke(argv=None):
+class _Recorder:
+    """Collects {bench: {wall_s, throughput...}} rows for --json."""
+
+    def __init__(self, mode: str):
+        self.mode = mode
+        self.benches: dict = {}
+
+    def run(self, name: str, fn):
+        """Time fn() and record its wall time under name."""
+        t0 = time.monotonic()
+        out = fn()
+        wall = time.monotonic() - t0
+        self.benches[name] = {"wall_s": round(wall, 3)}
+        return out
+
+    def note(self, name: str, **derived):
+        """Attach derived metrics (row counts, throughputs) to a bench."""
+        row = self.benches[name]
+        row.update(derived)
+        wall = row["wall_s"]
+        if "items" in row and wall:
+            row["items_per_s"] = round(row["items"] / wall, 2)
+
+    def dump(self, path: str) -> None:
+        doc = {"schema": 1, "mode": self.mode, "benches": self.benches,
+               "total_wall_s": round(sum(
+                   b["wall_s"] for b in self.benches.values()), 3)}
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"\nwrote {path}: {len(self.benches)} benches, "
+              f"total {doc['total_wall_s']:.1f}s")
+
+
+def smoke(json_out: str | None = None):
     """Prove every benchmark imports and runs one tiny config (<~2 min).
 
     No paper-claim checks -- those need the full dataset scale; this lane
     exists so CI catches import errors and API drift in the bench
-    scripts, not to validate the figures.
+    scripts, not to validate the figures.  Wall times per bench feed the
+    CI regression gate via --json.
     """
     from benchmarks import (bench_distributed, bench_kernels, bench_mplsh,
                             bench_schemes, bench_shuffle_vs_L,
                             collective_report, paper_common, roofline)
     assert collective_report and roofline  # import-only (need artifacts)
     paper_common.set_scale(n=2000, m=200)
+    rec = _Recorder("smoke")
 
     _section("smoke: fig4.1 shuffle vs L (random, tiny)")
-    rows = bench_shuffle_vs_L.run(datasets=("random",), ls=(4, 8))
+    rows = rec.run("fig4_1_shuffle_vs_L",
+                   lambda: bench_shuffle_vs_L.run(datasets=("random",),
+                                                  ls=(4, 8)))
+    rec.note("fig4_1_shuffle_vs_L", items=len(rows))
     print(f"fig4.1,rows={len(rows)}")
     _section("smoke: fig4.2 scheme comparison (tiny)")
-    srows = bench_schemes.run(ls=(8,))
-    t1 = bench_schemes.table1(n_shards=64)
+    srows = rec.run("fig4_2_schemes", lambda: bench_schemes.run(ls=(8,)))
+    t1 = rec.run("table1_load_balance",
+                 lambda: bench_schemes.table1(n_shards=64))
     print(f"fig4.2,rows={len(srows)},table1={len(t1)}")
     _section("smoke: mplsh composition (tiny)")
-    mrows = bench_mplsh.run(n=2048, m=256, ls=(8,))
+    mrows = rec.run("mplsh_composition",
+                    lambda: bench_mplsh.run(n=2048, m=256, ls=(8,)))
+    rec.note("mplsh_composition", items=len(mrows))
     print(f"mplsh,rows={len(mrows)}")
     _section("smoke: kernel micro-benchmarks")
-    bench_kernels.main()
+    rec.run("kernel_micro", bench_kernels.main)
     _section("smoke: distributed index + streaming serve (8 host devices)")
-    bench_distributed.main(smoke=True)
+    rec.run("distributed_streaming", lambda: bench_distributed.main(
+        smoke=True))
     print("\nsmoke OK: all benchmark scripts import and run")
+    if json_out:
+        rec.dump(json_out)
 
 
 def main(argv=None):
@@ -54,22 +105,26 @@ def main(argv=None):
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny configs, no claim checks (CI lane)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write per-bench wall-time/throughput JSON "
+                         "(the CI regression-gate artifact)")
     args = ap.parse_args(argv)
     if args.smoke:
-        return smoke()
+        return smoke(json_out=args.json)
     failures = []
+    rec = _Recorder("full")
 
     _section("Fig4.1 shuffle/recall/runtime vs L (simple vs layered)")
     from benchmarks import bench_shuffle_vs_L
     t0 = time.monotonic()
-    rows, fails = bench_shuffle_vs_L.main()
+    rows, fails = rec.run("fig4_1_shuffle_vs_L", bench_shuffle_vs_L.main)
     failures += fails
     print(f"fig4.1,{(time.monotonic() - t0) * 1e6:.0f},rows={len(rows)}")
 
     _section("Fig4.2 + Table1 scheme comparison (layered/sum/cauchy)")
     from benchmarks import bench_schemes
     t0 = time.monotonic()
-    srows, t1 = bench_schemes.main()
+    srows, t1 = rec.run("fig4_2_schemes", bench_schemes.main)
     # scale-free paper claims: layered beats simple on t_proxy at high L
     # (Fig 4.2); simple (uniform hash) is the most balanced while every
     # locality-preserving scheme trades balance for traffic (Table 1).
@@ -93,19 +148,19 @@ def main(argv=None):
     _section("MPLSH x Layered composition (paper section 5)")
     from benchmarks import bench_mplsh
     t0 = time.monotonic()
-    _, mfails = bench_mplsh.main()
+    _, mfails = rec.run("mplsh_composition", bench_mplsh.main)
     failures += mfails
     print(f"mplsh,{(time.monotonic() - t0) * 1e6:.0f},probes=2x4")
 
     _section("kernel micro-benchmarks")
     from benchmarks import bench_kernels
-    bench_kernels.main()
+    rec.run("kernel_micro", bench_kernels.main)
 
     if not args.fast:
         _section("distributed shard_map index (8 host devices, subprocess)")
         from benchmarks import bench_distributed
         t0 = time.monotonic()
-        bench_distributed.main()
+        rec.run("distributed_streaming", bench_distributed.main)
         print(f"distributed,{(time.monotonic() - t0) * 1e6:.0f},devices=8")
 
         import os
@@ -123,6 +178,9 @@ def main(argv=None):
             _section("perf summary (baseline vs optimized)")
             with open("experiments/perf_summary.md") as f:
                 print(f.read())
+
+    if args.json:
+        rec.dump(args.json)
 
     _section("paper-claim checks")
     if failures:

@@ -33,6 +33,8 @@ def main():
     ap.add_argument("--steps", type=int, default=4)
     ap.add_argument("--batch-size", type=int, default=64)
     ap.add_argument("--insert-size", type=int, default=128)
+    ap.add_argument("--k-neighbors", type=int, default=5,
+                    help="top-K results returned per query")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=True)
@@ -49,7 +51,8 @@ def main():
     svc = RetrievalService.build(cfg, params, doc_tokens[:args.docs], mesh,
                                  r=0.2, L=16, k=8, W=0.5,
                                  scheme=Scheme.LAYERED,
-                                 bucket_size=args.batch_size)
+                                 bucket_size=args.batch_size,
+                                 k_neighbors=args.k_neighbors)
     print(f"[build] indexed {args.docs} docs in "
           f"{time.monotonic() - t0:.1f}s "
           f"(data load max={svc.index.build_result.data_load.max()})")
@@ -72,9 +75,11 @@ def main():
         qtok = qtok.at[jnp.arange(args.batch_size), pos[:, 0]].set(
             newtok[:, 0])
         t0 = time.monotonic()
-        gids, dists, handles = svc.query(qtok)
+        gids, dists, handles = svc.query(qtok)          # (b, K) each
         dt = time.monotonic() - t0
-        batch_hits = int((gids == np.asarray(src)).sum())
+        src_np = np.asarray(src)
+        batch_hits = int((gids[:, 0] == src_np).sum())
+        topk_hits = int((gids == src_np[:, None]).any(axis=1).sum())
         hits += batch_hits
         fq = np.asarray([h.fq for h in handles])
         load = svc.service.shard_load()
@@ -82,6 +87,7 @@ def main():
               f"{args.batch_size} queries in {dt:.2f}s "
               f"rows/query={fq.mean():.2f} "
               f"self-retrieval={batch_hits}/{args.batch_size} "
+              f"(in top-{args.k_neighbors}: {topk_hits}) "
               f"load max/avg={load.max() / max(load.mean(), 1):.2f}")
 
     st = svc.service.stats

@@ -10,6 +10,11 @@ from __future__ import annotations
 
 import jax
 
+# Oldest jax release the shims below are tested against; CI's version
+# matrix installs exactly this pin for its "oldest" leg (the lower bound
+# in requirements.txt must match).
+MIN_SUPPORTED_JAX = "0.4.37"
+
 
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
     """``jax.shard_map`` with graceful fallback to the experimental API.

@@ -14,7 +14,9 @@ from repro.core.hashing import (HashParams, gamma, gh, g_of, hash_h,
                                 shard_of)
 from repro.core.offsets import batch_query_offsets, query_offsets
 from repro.core.accounting import TrafficReport
-from repro.core.simulate import StreamReport, simulate, simulate_stream
+from repro.core.simulate import (StreamReport, lsh_topk_reference,
+                                 recall_at_k, simulate, simulate_stream)
+from repro.core.ref_search import nearest_neighbor, nearest_neighbors
 from repro.core.index import DistributedLSHIndex
 
 __all__ = [
@@ -23,5 +25,7 @@ __all__ = [
     "sample_params", "shard_key", "shard_of",
     "batch_query_offsets", "query_offsets",
     "TrafficReport", "simulate", "StreamReport", "simulate_stream",
+    "lsh_topk_reference", "recall_at_k",
+    "nearest_neighbor", "nearest_neighbors",
     "DistributedLSHIndex",
 ]

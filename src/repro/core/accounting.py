@@ -43,6 +43,8 @@ class TrafficReport:
     # ---- quality ----
     recall: Optional[float] = None
     results_emitted: Optional[int] = None
+    recall_at_k: Optional[float] = None   # |LSH topK ∩ exact topK| / K
+    k_neighbors: Optional[int] = None     # the K recall_at_k was run at
 
     def summary(self) -> str:
         lines = [
@@ -62,6 +64,8 @@ class TrafficReport:
         if self.recall is not None:
             lines.append(f"  recall={self.recall:.3f}"
                          f" emitted={self.results_emitted}")
+        if self.recall_at_k is not None:
+            lines.append(f"  recall@{self.k_neighbors}={self.recall_at_k:.3f}")
         return "\n".join(lines)
 
 

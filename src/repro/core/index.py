@@ -14,7 +14,8 @@ Active-DHT send becomes a fixed-capacity ``jax.lax.all_to_all`` inside
   search: the receiving shard regenerates the offsets from qid (consistent
           RNG), selects those whose Key == its own id, and scans its stored
           rows for bucket-equal points within distance cr (Fig 3.2 Reduce).
-  return: two pmin collectives combine per-shard best candidates.
+  return: each shard's per-qid local top-K is combined across shards by
+          an all_gather + static K-way merge (dedup by gid).
 
 ``build`` is a thin wrapper: reset the store, then ``insert`` the whole
 dataset.  The index is therefore a *streaming* service primitive -- the
@@ -44,6 +45,7 @@ from repro.core.config import LSHConfig, Scheme
 from repro.core.hashing import (hash_h, pack_buckets, sample_params,
                                 shard_key)
 from repro.core.offsets import query_offsets
+from repro.core.ref_search import topk_sort_jnp
 
 INF = jnp.float32(jnp.finfo(jnp.float32).max)
 IMAX = jnp.int32(jnp.iinfo(jnp.int32).max)
@@ -138,12 +140,27 @@ class DeleteResult:
 
 @dataclasses.dataclass
 class QueryResult:
-    best_dist: np.ndarray     # (m,) sqrt distance of best within cr (inf if none)
-    best_gid: np.ndarray      # (m,) global id of best candidate (IMAX if none)
+    topk_dist: np.ndarray     # (m, K) ascending sqrt distances within cr
+    #                           (inf-padded past the available candidates)
+    topk_gid: np.ndarray      # (m, K) matching global ids (IMAX-padded)
     n_within_cr: np.ndarray   # (m,) candidates emitted within cr
     fq: np.ndarray            # (m,) rows shipped per query (Definition 7)
     query_load: np.ndarray    # (S,) live rows received per shard
     drops: int
+
+    @property
+    def k_neighbors(self) -> int:
+        return self.topk_dist.shape[1]
+
+    @property
+    def best_dist(self) -> np.ndarray:
+        """(m,) nearest returned distance -- the old best-1 view."""
+        return self.topk_dist[:, 0]
+
+    @property
+    def best_gid(self) -> np.ndarray:
+        """(m,) nearest returned gid -- the old best-1 view."""
+        return self.topk_gid[:, 0]
 
 
 class DistributedLSHIndex:
@@ -154,11 +171,15 @@ class DistributedLSHIndex:
     """
 
     def __init__(self, cfg: LSHConfig, mesh: Mesh, axis: str = "shard",
-                 slack: float = 4.0, use_kernel: bool = False):
+                 slack: float = 4.0, use_kernel: bool = False,
+                 k_neighbors: int = 1):
         """use_kernel=True routes the per-shard bucket search through the
         Pallas streaming kernel (kernels/bucket_search.py) instead of the
         jnp mask formulation -- identical results (tested), O(R*N) score
-        matrix never materialised."""
+        matrix never materialised.
+
+        k_neighbors is the default K for ``query``: each query returns its
+        K best (dist, gid) pairs within cr, merged across shards."""
         if mesh.shape[axis] != cfg.n_shards:
             raise ValueError(
                 f"mesh axis {axis}={mesh.shape[axis]} != n_shards={cfg.n_shards}")
@@ -167,6 +188,9 @@ class DistributedLSHIndex:
         self.axis = axis
         self.slack = slack
         self.use_kernel = use_kernel
+        if not 1 <= k_neighbors <= 128:
+            raise ValueError(f"k_neighbors={k_neighbors} not in [1, 128]")
+        self.k_neighbors = k_neighbors
         key = jax.random.PRNGKey(cfg.seed)
         kp, kq = jax.random.split(key)
         self.params = sample_params(kp, cfg)
@@ -457,7 +481,8 @@ class DistributedLSHIndex:
     # ------------------------------------------------------------------
     # Query
     # ------------------------------------------------------------------
-    def _make_query_fn(self, m: int, cap: int, Cq: int, donate: bool):
+    def _make_query_fn(self, m: int, cap: int, Cq: int, donate: bool,
+                       K: int):
         cfg, params, base_key = self.cfg, self.params, self.base_key
         S, L = cfg.n_shards, cfg.L
         axis = self.axis
@@ -527,19 +552,18 @@ class DistributedLSHIndex:
             firstocc = ~jnp.any(eqp & earlier[None], axis=-1)
             probe = mine & firstocc                            # (R, L)
 
-            # ---- bucket search (Fig 3.2 Reduce body) ----
+            # ---- bucket search (Fig 3.2 Reduce body), local top-K ----
             if use_kernel:
                 from repro.kernels import ops as kops
                 qb = jax.lax.bitcast_convert_type(
                     rpacked, jnp.int32).reshape(rpacked.shape[0], -1)
                 pb = jax.lax.bitcast_convert_type(store_packed, jnp.int32)
-                row_best, row_gid, row_emit = kops.bucket_search(
+                row_d, row_g, row_emit = kops.bucket_search(
                     rq, jnp.sum(rq ** 2, -1), qb,
                     probe.astype(jnp.int32),
                     store_x, jnp.sum(store_x ** 2, -1), pb,
                     store_gid, store_valid.astype(jnp.int32),
-                    float(np.float32((cfg.c * cfg.r) ** 2)), L=L)
-                row_gid = jnp.where(row_best < INF, row_gid, IMAX)
+                    float(np.float32((cfg.c * cfg.r) ** 2)), L=L, k=K)
             else:
                 # match[rrow, srow] = stored bucket equals one of my probes
                 match = jnp.any(
@@ -553,27 +577,40 @@ class DistributedLSHIndex:
                 d2 = jnp.maximum(d2, 0.0)
                 hit = match & (d2 <= cr2)
                 d2m = jnp.where(hit, d2, INF)
-                row_best = jnp.min(d2m, axis=1)                # (R,)
-                row_arg = jnp.argmin(d2m, axis=1)
-                row_gid = jnp.where(row_best < INF, store_gid[row_arg],
-                                    IMAX)
+                gidm = jnp.where(
+                    hit, jnp.broadcast_to(store_gid[None, :], d2m.shape),
+                    IMAX)
+                row_d, row_g = topk_sort_jnp(d2m, gidm, K, pad_d=INF)
                 row_emit = hit.sum(axis=1).astype(jnp.int32)
 
-            # ---- combine across shards (result return path) ----
+            # ---- combine across shards (result return path): each shard
+            # holds at most one live row per qid (dup_row dedupe above),
+            # so its per-qid local top-K is a scatter; the global top-K is
+            # an all_gather + static K-way merge keyed by qid ----
             qid_safe = jnp.where(rvalid, rid, m)  # scatter sink row m
-            best = jnp.full((m + 1,), INF).at[qid_safe].min(
-                jnp.where(rvalid, row_best, INF))
-            gbest = jax.lax.pmin(best, axis)                   # (m+1,)
-            cand = jnp.where(
-                rvalid & (row_best <= gbest[qid_safe]) & (row_best < INF),
-                row_gid, IMAX)
-            gidbuf = jnp.full((m + 1,), IMAX,
-                              jnp.int32).at[qid_safe].min(cand)
-            ggid = jax.lax.pmin(gidbuf, axis)
+            loc_d = jnp.full((m + 1, K), INF).at[qid_safe].set(
+                jnp.where(rvalid[:, None], row_d, INF))
+            loc_g = jnp.full((m + 1, K), IMAX, jnp.int32).at[qid_safe].set(
+                jnp.where(rvalid[:, None], row_g, IMAX))
+            all_d = jax.lax.all_gather(loc_d, axis)            # (S, m+1, K)
+            all_g = jax.lax.all_gather(loc_g, axis)
+            cand_d = jnp.moveaxis(all_d, 0, 1).reshape(m + 1, S * K)
+            cand_g = jnp.moveaxis(all_g, 0, 1).reshape(m + 1, S * K)
+            # dedup by gid (a point probed via multiple offsets must count
+            # once): sort by (gid, dist), blank repeats, re-sort by
+            # (dist, gid).  Sentinel (INF, IMAX) pairs are fixed points.
+            sg, sd = jax.lax.sort((cand_g, cand_d), dimension=1, num_keys=2)
+            dup = jnp.concatenate(
+                [jnp.zeros((m + 1, 1), bool), sg[:, 1:] == sg[:, :-1]],
+                axis=1)
+            sd = jnp.where(dup, INF, sd)
+            sg = jnp.where(dup, IMAX, sg)
+            gtopd, gtopg = jax.lax.sort((sd, sg), dimension=1, num_keys=2)
+            gtopd, gtopg = gtopd[:, :K], gtopg[:, :K]          # (m+1, K)
             emit = jnp.zeros((m + 1,), jnp.int32).at[qid_safe].add(
                 jnp.where(rvalid, row_emit, 0))
             gemit = jax.lax.psum(emit, axis)
-            return (gbest[:m][None], ggid[:m][None], gemit[:m][None],
+            return (gtopd[:m][None], gtopg[:m][None], gemit[:m][None],
                     fq_local[None], recv_load[None], drops[None])
 
         spec = P(axis)
@@ -583,12 +620,16 @@ class DistributedLSHIndex:
             check_vma=False,   # pallas out_shape has no vma annotation
         ), donate_argnums=(0,) if donate else ())
 
-    def query(self, queries: jax.Array, donate: bool = False) -> QueryResult:
+    def query(self, queries: jax.Array, donate: bool = False,
+              k_neighbors: Optional[int] = None) -> QueryResult:
         """Answer a batch of queries (m, d), m divisible by n_shards.
 
         donate=True donates the query buffer to the compiled executable
         (serving front-ends stage queries into a scratch buffer that is
         dead after the call -- avoids one device copy per flush).
+
+        k_neighbors overrides the index-level default K for this call
+        (each distinct K compiles its own executable, cached).
         """
         if self.store is None:
             raise RuntimeError("call build() or insert() first")
@@ -597,26 +638,29 @@ class DistributedLSHIndex:
         m = queries.shape[0]
         if m % S:
             raise ValueError(f"m={m} must divide by n_shards={S}")
+        K = self.k_neighbors if k_neighbors is None else k_neighbors
+        if not 1 <= K <= 128:
+            raise ValueError(f"k_neighbors={K} not in [1, 128]")
         m_loc = m // S
         Cq = self._query_capacity(m_loc)
         st = self.store
 
-        key = (m, st.capacity, Cq, donate)
+        key = (m, st.capacity, Cq, donate, K)
         fn = self._query_fns.get(key)
         if fn is None:
             fn = self._query_fns[key] = self._make_query_fn(
-                m, st.capacity, Cq, donate)
+                m, st.capacity, Cq, donate, K)
         qids = jnp.arange(m, dtype=jnp.int32)
-        gbest, ggid, gemit, fq, load, drops = fn(
+        gtopd, gtopg, gemit, fq, load, drops = fn(
             queries, qids, st.x, st.packed, st.gid, st.valid)
-        # every shard computed the same global (m,) buffers; take shard 0
-        gbest = np.asarray(gbest)[0]
-        ggid = np.asarray(ggid)[0]
+        # every shard computed the same global (m, K) buffers; take shard 0
+        gtopd = np.asarray(gtopd)[0]
+        gtopg = np.asarray(gtopg)[0]
         gemit = np.asarray(gemit)[0]
         return QueryResult(
-            best_dist=np.sqrt(np.where(gbest < np.float32(3e38), gbest,
+            topk_dist=np.sqrt(np.where(gtopd < np.float32(3e38), gtopd,
                                        np.inf)),
-            best_gid=ggid,
+            topk_gid=gtopg,
             n_within_cr=gemit,
             fq=np.asarray(fq).reshape(-1),
             query_load=np.asarray(load),

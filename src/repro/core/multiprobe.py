@@ -28,19 +28,25 @@ from repro.core.hashing import HashParams, gamma
 
 PAIR_POOL = 8  # pairs drawn from the best 8 single perturbations
 
+# Padding rows when a query has fewer candidate perturbations than
+# n_probes.  Repeating the home bucket (the old behaviour) made the
+# kernel probe the same bucket twice and double-count its hits; the
+# sentinel can never equal a real bucket vector (home buckets live in a
+# tiny range around 0) and every probe-validity mask must exclude it.
+SENTINEL = int(jnp.iinfo(jnp.int32).min)
 
-def _candidates(k: int):
-    """Static candidate list: (coord_a, delta_a, coord_b, delta_b) with
-    b == -1 meaning a single-coordinate probe."""
-    singles = [(i, -1, -1, 0) for i in range(k)] + \
-              [(i, +1, -1, 0) for i in range(k)]
-    return singles
+
+def probe_valid_mask(probes: jax.Array) -> jax.Array:
+    """(..., k) probe bucket vectors -> (...) bool, False on sentinel
+    padding rows."""
+    return probes[..., 0] != SENTINEL
 
 
 def mplsh_probes(params: HashParams, cfg: LSHConfig, q: jax.Array,
                  n_probes: int) -> jax.Array:
     """Probe bucket vectors for one query: (n_probes + 1, k) int32,
-    row 0 = the home bucket H(q)."""
+    row 0 = the home bucket H(q); rows past the candidate pool are
+    SENTINEL padding (see probe_valid_mask)."""
     k = cfg.k
     g = gamma(params, q, cfg.W)                    # (k,)
     home = jnp.floor(g).astype(jnp.int32)
@@ -86,9 +92,9 @@ def mplsh_probes(params: HashParams, cfg: LSHConfig, q: jax.Array,
 
     probes = jax.vmap(build)(order)                 # (n_take, k)
     out = jnp.concatenate([home[None], probes], axis=0)
-    if n_take < n_probes:                           # pad by repeating home
-        out = jnp.concatenate(
-            [out, jnp.tile(home[None], (n_probes - n_take, 1))], axis=0)
+    if n_take < n_probes:                           # sentinel padding
+        pad = jnp.full((n_probes - n_take, k), SENTINEL, jnp.int32)
+        out = jnp.concatenate([out, pad], axis=0)
     return out
 
 

@@ -9,6 +9,7 @@ and the Fig 4.1 shuffle-size curves quickly on one host.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -52,9 +53,26 @@ def make_sim(cfg: LSHConfig) -> SimState:
     return SimState(cfg, sample_params(kp, cfg), kq)
 
 
+def _probe_hashes(sim: SimState, queries: jax.Array,
+                  qids: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """First-layer bucket vectors of every probe: (m, L', k) int32 plus a
+    (m, L') validity mask (False on mplsh sentinel padding rows)."""
+    cfg, params, base_key = sim.cfg, sim.params, sim.base_key
+    if cfg.probes == "mplsh":
+        from repro.core.multiprobe import batch_mplsh_probes, probe_valid_mask
+        hk_off = batch_mplsh_probes(params, cfg, queries, cfg.L)
+        pvalid = probe_valid_mask(hk_off)
+    else:
+        offs = batch_query_offsets(base_key, qids, queries, cfg.L, cfg.r)
+        hk_off = hash_h(params, offs, cfg.W)           # (m, L, k)
+        pvalid = jnp.ones(hk_off.shape[:2], bool)
+    return hk_off, pvalid
+
+
 def simulate(cfg: LSHConfig, data: jax.Array, queries: jax.Array,
              compute_recall: bool = False,
-             data_chunk: int = 4096) -> accounting.TrafficReport:
+             data_chunk: int = 4096,
+             k_neighbors: Optional[int] = None) -> accounting.TrafficReport:
     """Run the full accounting for one scheme on one dataset.
 
     Args:
@@ -62,9 +80,12 @@ def simulate(cfg: LSHConfig, data: jax.Array, queries: jax.Array,
       queries: (m, d) float32 query points.
       compute_recall: if True, run the exact (chunked) candidate search and
         report the paper's recall metric (>=1 point within r returned).
+      k_neighbors: additionally report recall@K (fraction of the exact
+        brute-force top-K retrieved by the LSH candidate top-K within cr)
+        -- requires compute_recall=True.
     """
     sim = make_sim(cfg)
-    params, base_key = sim.params, sim.base_key
+    params = sim.params
     n, d = data.shape
     m = queries.shape[0]
     S = cfg.n_shards
@@ -76,20 +97,15 @@ def simulate(cfg: LSHConfig, data: jax.Array, queries: jax.Array,
 
     # ---------------- query routing ----------------
     qids = jnp.arange(m, dtype=jnp.int32)
-    if cfg.probes == "mplsh":
-        from repro.core.multiprobe import batch_mplsh_probes
-        hk_off = batch_mplsh_probes(params, cfg, queries, cfg.L)
-    else:
-        offs = batch_query_offsets(base_key, qids, queries, cfg.L, cfg.r)
-        hk_off = hash_h(params, offs, cfg.W)           # (m, L, k)
+    hk_off, pvalid = _probe_hashes(sim, queries, qids)  # (m, L', k)
     keys_off = shard_key(params, cfg, hk_off)          # (m, L) int32
     if cfg.scheme == Scheme.SIMPLE:
         # one pair per distinct H-bucket (the Key is the bucket id)
         packed_off = pack_buckets(params, hk_off)      # (m, L, 2)
-        live = _dedupe_mask_packed(packed_off)
+        live = _dedupe_mask_packed(packed_off) & pvalid
     else:
         # one pair per distinct GH value
-        live = _dedupe_mask_2d(keys_off)
+        live = _dedupe_mask_2d(keys_off) & pvalid
     dest = jnp.mod(keys_off, S).astype(jnp.int32)      # (m, L)
 
     fq = live.sum(axis=1)                              # (m,)
@@ -118,11 +134,47 @@ def simulate(cfg: LSHConfig, data: jax.Array, queries: jax.Array,
     )
 
     if compute_recall:
-        rec, emitted = _exact_search_recall(
-            cfg, params, data, queries, hk_off, data_chunk)
+        rec, emitted, _, lsh_idx = _exact_search_recall(
+            cfg, params, data, queries, hk_off, pvalid, data_chunk,
+            k=k_neighbors)
         report.recall = rec
         report.results_emitted = emitted
+        if k_neighbors:
+            from repro.core.ref_search import nearest_neighbors
+            _, true_idx = nearest_neighbors(np.asarray(data),
+                                            np.asarray(queries), k_neighbors)
+            report.recall_at_k = recall_at_k(lsh_idx, true_idx)
+            report.k_neighbors = k_neighbors
     return report
+
+
+def recall_at_k(retrieved: np.ndarray, truth: np.ndarray) -> float:
+    """Mean per-query |retrieved top-K ∩ exact top-K| / K (the survey's
+    recall@K).  Sentinel (IMAX) entries never match real indices."""
+    m, k = truth.shape
+    overlap = (retrieved[:, :, None] == truth[:, None, :]).any(axis=1)
+    imax = np.iinfo(np.int32).max
+    valid = truth != imax
+    return float((overlap & valid).sum(axis=1).mean() / k)
+
+
+def lsh_topk_reference(cfg: LSHConfig, data: jax.Array, queries: jax.Array,
+                       k: int, data_chunk: int = 4096
+                       ) -> tuple[np.ndarray, np.ndarray]:
+    """Single-machine LSH top-K ground truth: for each query, the exact K
+    best (dist, gid) pairs among its LSH candidate set (points whose
+    H-bucket matches a probed bucket) within distance cr, in the same
+    (dist, gid) lex order as the distributed path -- what the sharded
+    index must reproduce regardless of placement scheme.
+
+    Returns (m, k) sqrt-distances (inf pad) and gids (IMAX pad).
+    """
+    sim = make_sim(cfg)
+    qids = jnp.arange(queries.shape[0], dtype=jnp.int32)
+    hk_off, pvalid = _probe_hashes(sim, queries, qids)
+    _, _, topd, topg = _exact_search_recall(
+        cfg, sim.params, data, queries, hk_off, pvalid, data_chunk, k=k)
+    return topd, topg
 
 
 @dataclasses.dataclass
@@ -224,41 +276,64 @@ def simulate_stream(cfg: LSHConfig, data: jax.Array, queries: jax.Array,
 
 def _exact_search_recall(cfg: LSHConfig, params: HashParams,
                          data: jax.Array, queries: jax.Array,
-                         hk_off: jax.Array,
-                         data_chunk: int) -> tuple[float, int]:
-    """Chunked exact candidate search.
+                         hk_off: jax.Array, pvalid: jax.Array,
+                         data_chunk: int, k: Optional[int] = None
+                         ) -> tuple[float, int,
+                                    Optional[np.ndarray],
+                                    Optional[np.ndarray]]:
+    """Chunked exact candidate search (single pass over the data).
 
     A data point p is a candidate for query q iff H(p) equals H(q+delta_i)
-    for some offset i (note: placement scheme does NOT change the candidate
-    set -- GH is a function of H, so bucket-mates are always co-located
-    with the routed query row).  Recall = fraction of queries for which a
-    returned candidate lies within distance r.
+    for some live offset i (note: placement scheme does NOT change the
+    candidate set -- GH is a function of H, so bucket-mates are always
+    co-located with the routed query row).  Returns
+      (recall, emitted, topk_dist, topk_gid):
+    recall = fraction of queries for which a returned candidate lies
+    within distance r; emitted = total candidates within cr; with k set,
+    also the per-query exact top-K among candidates within cr, as (m, k)
+    sqrt-distances / gids in (dist, gid) lex order (else None, None).
     """
+    from repro.core.ref_search import topk_merge_host, topk_sort_jnp
     m, L, _ = hk_off.shape
     packed_off = pack_buckets(params, hk_off)          # (m, L, 2)
     r2 = jnp.float32(cfg.r ** 2)
     cr2 = jnp.float32((cfg.c * cfg.r) ** 2)
     q_sq = jnp.sum(queries ** 2, axis=-1)              # (m,)
+    imax = np.iinfo(np.int32).max
 
-    def chunk_stats(chunk: jax.Array, packed_chunk: jax.Array):
+    def chunk_stats(chunk: jax.Array, packed_chunk: jax.Array, idx0):
         # (m, B) candidate mask
         eq = jnp.all(packed_off[:, :, None, :] == packed_chunk[None, None],
                      axis=-1)                          # (m, L, B)
-        cand = jnp.any(eq, axis=1)                     # (m, B)
+        cand = jnp.any(eq & pvalid[:, :, None], axis=1)  # (m, B)
         d2 = (q_sq[:, None] + jnp.sum(chunk ** 2, axis=-1)[None, :]
               - 2.0 * queries @ chunk.T)
+        d2 = jnp.maximum(d2, 0.0)
+        hit = cand & (d2 <= cr2)
         hit_r = jnp.any(cand & (d2 <= r2), axis=1)     # (m,)
-        emit = jnp.sum(cand & (d2 <= cr2))
-        return hit_r, emit
+        emit = jnp.sum(hit)
+        if not k:
+            return hit_r, emit, (), ()
+        cd = jnp.where(hit, d2, jnp.inf)
+        cg = jnp.where(hit, idx0 + jnp.arange(chunk.shape[0],
+                                              dtype=jnp.int32)[None, :],
+                       imax)
+        return hit_r, emit, *topk_sort_jnp(cd, cg, k)
 
     chunk_stats = jax.jit(chunk_stats)
     hits = np.zeros((m,), dtype=bool)
     emitted = 0
+    best = np.full((m, k), np.inf, np.float32) if k else None
+    arg = np.full((m, k), imax, np.int32) if k else None
     n = data.shape[0]
     packed_data = pack_buckets(params, hash_h(params, data, cfg.W))
     for s in range(0, n, data_chunk):
         e = min(n, s + data_chunk)
-        h, em = chunk_stats(data[s:e], packed_data[s:e])
+        h, em, cd, cg = chunk_stats(data[s:e], packed_data[s:e],
+                                    np.int32(s))
         hits |= np.asarray(h)
         emitted += int(em)
-    return float(hits.mean()), emitted
+        if k:
+            best, arg = topk_merge_host(best, arg, cd, cg)
+    return (float(hits.mean()), emitted,
+            np.sqrt(best) if k else None, arg)

@@ -1,15 +1,19 @@
-"""Pallas TPU kernel: streaming bucket-constrained nearest-neighbour scan.
+"""Pallas TPU kernel: streaming bucket-constrained top-K neighbour scan.
 
 The Reduce/UDF inner loop of the paper (Fig 3.2): for every received query
-row, find the closest stored point among those whose packed H-bucket
+row, find the K closest stored points among those whose packed H-bucket
 matches one of the query's *probed* offset buckets, subject to the
 distance threshold (cr)^2.
 
 Fusion story: the (TILE_R, TILE_N) pairwise-distance tile comes off the
 MXU (via -2 Q P^T plus norm epilogue), and the bucket-equality mask, the
-threshold filter and the running (best, argbest, hit-count) reduction all
-happen in the same VMEM residency -- the O(R*N) distance matrix never
-reaches HBM.
+threshold filter and the running top-K reduction all happen in the same
+VMEM residency -- the O(R*N) distance matrix never reaches HBM.  The
+accumulator is a per-row (dist^2, gid) list of length K kept sorted by
+(dist^2, gid) lex order in the revisited output blocks; each point tile
+is merged in with K extract-min passes over the tile's masked distances
+concatenated with the running K (an insertion merge -- O(K*(TILE_N+K))
+VPU work per tile, no sort network needed).
 
 Grid: (row tiles, point tiles); the point axis is minor-most, so the
 output blocks for a row tile are revisited across point tiles and act as
@@ -26,12 +30,13 @@ from jax.experimental import pallas as pl
 TILE_R = 128
 TILE_N = 128
 F32_MAX = float(jnp.finfo(jnp.float32).max)
+IMAX = int(jnp.iinfo(jnp.int32).max)
 
 
 def _bucket_search_kernel(q_ref, qsq_ref, qb_ref, probe_ref,
                           p_ref, psq_ref, pb_ref, gid_ref, pvalid_ref,
                           cr2_ref,
-                          best_ref, arg_ref, cnt_ref, *, L: int):
+                          topd_ref, topg_ref, cnt_ref, *, L: int, K: int):
     j = pl.program_id(1)
 
     q = q_ref[...].astype(jnp.float32)            # (TR, d)
@@ -54,34 +59,68 @@ def _bucket_search_kernel(q_ref, qsq_ref, qb_ref, probe_ref,
     match = match & (pvalid_ref[...].reshape(1, -1) > 0)
 
     hit = match & (d2 <= cr2_ref[0, 0])
-    d2m = jnp.where(hit, d2, F32_MAX)
-    tile_best = jnp.min(d2m, axis=1)              # (TR,)
-    # argbest without gather (TPU-friendly): min of gids at the best dist
+    d2m = jnp.where(hit, d2, F32_MAX)             # (TR, TN)
     gid = gid_ref[...]                            # (TN,)
-    imax = jnp.int32(jnp.iinfo(jnp.int32).max)
-    at_best = hit & (d2m <= tile_best[:, None])
-    tile_gid = jnp.min(jnp.where(at_best, gid[None, :], imax), axis=1)
+    gidm = jnp.where(hit, gid[None, :], IMAX)     # non-hits carry no gid
     tile_cnt = jnp.sum(hit, axis=1).astype(jnp.int32)
 
     @pl.when(j == 0)
     def _init():
-        best_ref[...] = tile_best
-        arg_ref[...] = tile_gid
-        cnt_ref[...] = tile_cnt
+        topd_ref[...] = jnp.full(topd_ref.shape, F32_MAX, jnp.float32)
+        topg_ref[...] = jnp.full(topg_ref.shape, IMAX, jnp.int32)
+        cnt_ref[...] = jnp.zeros(cnt_ref.shape, jnp.int32)
 
-    @pl.when(j > 0)
-    def _accum():
-        prev = best_ref[...]
-        better = tile_best < prev
-        best_ref[...] = jnp.where(better, tile_best, prev)
-        arg_ref[...] = jnp.where(better, tile_gid, arg_ref[...])
-        cnt_ref[...] = cnt_ref[...] + tile_cnt
+    cnt_ref[...] = cnt_ref[...] + tile_cnt
+
+    # ---- merge the tile into the running sorted top-K accumulator ----
+    # Candidate pool = this tile's masked (dist, gid) pairs + the running
+    # K.  gids are unique across the pool (stored rows are unique and the
+    # running K came from earlier, disjoint tiles); empty slots are the
+    # (F32_MAX, IMAX) sentinel, which extract-min leaves in place, so
+    # fewer-than-K hits pad the tail with sentinels.
+    cand_d = jnp.concatenate([d2m, topd_ref[...]], axis=1)  # (TR, TN+K)
+    cand_g = jnp.concatenate([gidm, topg_ref[...]], axis=1)
+    out_d, out_g = [], []
+    for _ in range(K):
+        bd = jnp.min(cand_d, axis=1)                          # (TR,)
+        bg = jnp.min(jnp.where(cand_d <= bd[:, None], cand_g, IMAX),
+                     axis=1)                                  # lex tie-break
+        out_d.append(bd)
+        out_g.append(bg)
+        taken = (cand_d == bd[:, None]) & (cand_g == bg[:, None])
+        cand_d = jnp.where(taken, F32_MAX, cand_d)
+        cand_g = jnp.where(taken, IMAX, cand_g)
+    topd_ref[...] = jnp.stack(out_d, axis=1)                  # (TR, K)
+    topg_ref[...] = jnp.stack(out_g, axis=1)
 
 
-@functools.partial(jax.jit, static_argnames=("L", "interpret"))
+def vmem_bytes_per_step(d: int, L: int, K: int) -> int:
+    """VMEM footprint of one grid step's blocks (inputs + accumulators).
+
+    By construction this is independent of R and N -- the proof that the
+    kernel never materialises the O(R*N) distance matrix: per step it
+    holds one (TILE_R, TILE_N) distance tile plus O(TILE_R * K) outputs.
+    """
+    in_bytes = (TILE_R * d * 4          # q tile
+                + TILE_R * 4            # qsq
+                + TILE_R * 2 * L * 4    # qbuckets
+                + TILE_R * L * 4        # probe
+                + TILE_N * d * 4        # p tile
+                + TILE_N * 4            # psq
+                + TILE_N * 2 * 4        # pbuckets
+                + TILE_N * 4            # gid
+                + TILE_N * 4            # pvalid
+                + 4)                    # cr2 scalar
+    out_bytes = TILE_R * K * 4 * 2 + TILE_R * 4   # topd, topg, cnt
+    dist_tile = TILE_R * TILE_N * 4               # d2 scratch residency
+    return in_bytes + out_bytes + dist_tile
+
+
+@functools.partial(jax.jit, static_argnames=("L", "K", "interpret"))
 def bucket_search_pallas(q, qsq, qbuckets, probe, p, psq, pbuckets, gid,
-                         pvalid, cr2, *, L: int, interpret: bool = False):
-    """Streaming masked NN scan.
+                         pvalid, cr2, *, L: int, K: int = 1,
+                         interpret: bool = False):
+    """Streaming masked top-K NN scan.
 
     Args:
       q: (R, d) query rows;          qsq: (R,) squared norms.
@@ -91,15 +130,20 @@ def bucket_search_pallas(q, qsq, qbuckets, probe, p, psq, pbuckets, gid,
       pbuckets: (N, 2) int32 packed bucket per stored point.
       gid: (N,) int32 global ids;    pvalid: (N,) int32 0/1.
       cr2: scalar threshold (c*r)^2.
+      K: neighbours to keep per row (static).
     Returns:
-      best (R,) f32 min masked distance^2 (F32_MAX if none),
-      bestgid (R,) int32, count (R,) int32 hits within cr.
+      topd (R, K) f32 masked distance^2, ascending (F32_MAX sentinel pad),
+      topg (R, K) int32 gids (IMAX sentinel pad),
+      count (R,) int32 hits within cr.
+    Rows are sorted by (distance^2, gid) lex order, so K=1 reproduces the
+    old single-best contract exactly.
     """
     R, d = q.shape
     N = p.shape[0]
     assert R % TILE_R == 0 and N % TILE_N == 0, (R, N)
+    assert 1 <= K <= TILE_N, K
     grid = (R // TILE_R, N // TILE_N)
-    kernel = functools.partial(_bucket_search_kernel, L=L)
+    kernel = functools.partial(_bucket_search_kernel, L=L, K=K)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -116,13 +160,13 @@ def bucket_search_pallas(q, qsq, qbuckets, probe, p, psq, pbuckets, gid,
             pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((TILE_R,), lambda i, j: (i,)),
-            pl.BlockSpec((TILE_R,), lambda i, j: (i,)),
+            pl.BlockSpec((TILE_R, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((TILE_R, K), lambda i, j: (i, 0)),
             pl.BlockSpec((TILE_R,), lambda i, j: (i,)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((R,), jnp.float32),
-            jax.ShapeDtypeStruct((R,), jnp.int32),
+            jax.ShapeDtypeStruct((R, K), jnp.float32),
+            jax.ShapeDtypeStruct((R, K), jnp.int32),
             jax.ShapeDtypeStruct((R,), jnp.int32),
         ],
         interpret=interpret,

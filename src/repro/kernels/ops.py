@@ -50,11 +50,15 @@ def lsh_hash(x: jax.Array, a: jax.Array, b: jax.Array, *, w: float,
 
 
 def bucket_search(q, qsq, qbuckets, probe, p, psq, pbuckets, gid, pvalid,
-                  cr2, *, L: int, use_kernel: bool = True):
-    """Streaming masked NN scan; see bucket_search_pallas."""
+                  cr2, *, L: int, k: int = 1, use_kernel: bool = True):
+    """Streaming masked top-K NN scan; see bucket_search_pallas.
+
+    Returns (topd (R, k), topg (R, k), cnt (R,)) in (dist^2, gid) lex
+    order, sentinel-padded with (F32_MAX, IMAX) past the available hits.
+    """
     if not use_kernel:
         return ref.bucket_search_ref(q, qsq, qbuckets, probe, p, psq,
-                                     pbuckets, gid, pvalid, cr2, L=L)
+                                     pbuckets, gid, pvalid, cr2, L=L, K=k)
     R, N = q.shape[0], p.shape[0]
     qp = _pad_to(q, 0, TILE_R)
     qsqp = _pad_to(qsq, 0, TILE_R)
@@ -65,10 +69,10 @@ def bucket_search(q, qsq, qbuckets, probe, p, psq, pbuckets, gid, pvalid,
     pbp = _pad_to(pbuckets, 0, TILE_N)
     gidp = _pad_to(gid, 0, TILE_N, value=jnp.iinfo(jnp.int32).max)
     pvp = _pad_to(pvalid, 0, TILE_N)         # padded points invalid
-    best, bgid, cnt = bucket_search_pallas(
-        qp, qsqp, qbp, prp, pp, psqp, pbp, gidp, pvp, cr2, L=L,
+    topd, topg, cnt = bucket_search_pallas(
+        qp, qsqp, qbp, prp, pp, psqp, pbp, gidp, pvp, cr2, L=L, K=k,
         interpret=_on_cpu())
-    return best[:R], bgid[:R], cnt[:R]
+    return topd[:R], topg[:R], cnt[:R]
 
 
 def flash_attention(q, k, v, *, causal: bool = True, scale=None,

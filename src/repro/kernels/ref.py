@@ -23,8 +23,13 @@ def lsh_hash_ref(x: jax.Array, a: jax.Array, b: jax.Array, *,
 
 
 def bucket_search_ref(q, qsq, qbuckets, probe, p, psq, pbuckets, gid,
-                      pvalid, cr2, *, L: int):
-    """Masked NN scan; see bucket_search_pallas for the contract."""
+                      pvalid, cr2, *, L: int, K: int = 1):
+    """Masked top-K NN scan; see bucket_search_pallas for the contract.
+
+    Returns (topd (R, K), topg (R, K), cnt (R,)): per-row K best
+    (dist^2, gid) pairs in (dist^2, gid) lex order, sentinel-padded with
+    (F32_MAX, IMAX) when fewer than K points hit.
+    """
     d2 = qsq[:, None] + psq[None, :] - 2.0 * q @ p.T
     d2 = jnp.maximum(d2, 0.0)
     qb = qbuckets.reshape(q.shape[0], L, 2)
@@ -35,11 +40,15 @@ def bucket_search_ref(q, qsq, qbuckets, probe, p, psq, pbuckets, gid,
     match = match & (pvalid[None, :] > 0)
     hit = match & (d2 <= cr2)
     d2m = jnp.where(hit, d2, F32_MAX)
-    best = jnp.min(d2m, axis=1)
-    at_best = hit & (d2m <= best[:, None])
-    bestgid = jnp.min(jnp.where(at_best, gid[None, :], IMAX), axis=1)
+    gidm = jnp.where(hit, jnp.broadcast_to(gid[None, :], d2m.shape), IMAX)
+    sd, sg = jax.lax.sort((d2m, gidm), dimension=1, num_keys=2)
+    pad = max(0, K - sd.shape[1])
+    if pad:
+        sd = jnp.pad(sd, ((0, 0), (0, pad)), constant_values=F32_MAX)
+        sg = jnp.pad(sg, ((0, 0), (0, pad)),
+                     constant_values=jnp.iinfo(jnp.int32).max)
     cnt = jnp.sum(hit, axis=1).astype(jnp.int32)
-    return best, bestgid, cnt
+    return sd[:, :K], sg[:, :K], cnt
 
 
 def attention_ref(q, k, v, *, causal: bool = True,

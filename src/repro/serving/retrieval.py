@@ -52,15 +52,18 @@ class RetrievalService:
               r: float = 0.25, c: float = 2.0, k: int = 10, L: int = 16,
               W: float = 1.0, scheme: Scheme = Scheme.LAYERED,
               seed: int = 0, use_kernel: bool = False,
-              bucket_size: int = 64, max_latency_ms: float = 25.0):
+              bucket_size: int = 64, max_latency_ms: float = 25.0,
+              k_neighbors: int = 1):
         docs = embed_texts(params, cfg, doc_tokens)
         lsh = LSHConfig(d=int(docs.shape[1]), k=k, W=W, r=r, c=c, L=L,
                         n_shards=mesh.shape["shard"], scheme=scheme,
                         seed=seed)
-        index = DistributedLSHIndex(lsh, mesh, use_kernel=use_kernel)
+        index = DistributedLSHIndex(lsh, mesh, use_kernel=use_kernel,
+                                    k_neighbors=k_neighbors)
         index.build(docs)
         service = ShardedLSHService(index, bucket_size=bucket_size,
-                                    max_latency_ms=max_latency_ms)
+                                    max_latency_ms=max_latency_ms,
+                                    k_neighbors=k_neighbors)
         return cls(cfg=cfg, lsh=lsh, params=params, index=index,
                    service=service)
 
@@ -77,10 +80,14 @@ class RetrievalService:
         return np.arange(res.gid_start, res.gid_start + res.n_inserted)
 
     def query(self, query_tokens) -> tuple[np.ndarray, np.ndarray, list]:
-        """Embed a batch of queries and answer through the micro-batcher."""
+        """Embed a batch of queries and answer through the micro-batcher.
+
+        Returns (b, K) top-K gid and distance arrays (K = the service's
+        k_neighbors; column 0 is the best candidate) plus the handles.
+        """
         q = embed_texts(self.params, self.cfg, query_tokens)
         handles = self.service.submit_batch(np.asarray(q))
         self.service.drain()
-        gids = np.asarray([h.gid for h in handles])
-        dists = np.asarray([h.dist for h in handles])
+        gids = np.stack([h.gids for h in handles])
+        dists = np.stack([h.dists for h in handles])
         return gids, dists, handles

@@ -39,6 +39,8 @@ class PendingQuery:
     done: bool = False
     gid: int = -1                 # global id of best (c,r)-NN (IMAX if none)
     dist: float = float("inf")   # distance of best candidate
+    gids: Optional[np.ndarray] = None    # (K,) top-K gids (IMAX-padded)
+    dists: Optional[np.ndarray] = None   # (K,) ascending dists (inf-padded)
     n_within_cr: int = 0          # candidates within cr across all shards
     fq: int = 0                   # routed rows (Definition 7)
 
@@ -95,7 +97,11 @@ class ShardedLSHService:
     """Micro-batching query/insert front-end over a DistributedLSHIndex."""
 
     def __init__(self, index: DistributedLSHIndex, bucket_size: int = 64,
-                 max_latency_ms: float = 25.0):
+                 max_latency_ms: float = 25.0,
+                 k_neighbors: Optional[int] = None):
+        """k_neighbors: top-K returned per query (defaults to the index's
+        own k_neighbors); every flush reuses the one K-specialised
+        compiled executable."""
         S = index.cfg.n_shards
         if bucket_size % S:
             raise ValueError(
@@ -103,6 +109,11 @@ class ShardedLSHService:
         self.index = index
         self.bucket_size = bucket_size
         self.max_latency_ms = max_latency_ms
+        self.k_neighbors = (index.k_neighbors if k_neighbors is None
+                            else k_neighbors)
+        if not 1 <= self.k_neighbors <= 128:
+            raise ValueError(
+                f"k_neighbors={self.k_neighbors} not in [1, 128]")
         self.stats = ServiceStats()
         self._pending: List[PendingQuery] = []
         self._pending_q: List[np.ndarray] = []
@@ -159,12 +170,22 @@ class ShardedLSHService:
         buf = np.zeros((self.bucket_size, self.index.cfg.d), np.float32)
         buf[:take] = rows
         t0 = time.monotonic()
-        res = self.index.query(jnp.asarray(buf), donate=True)
+        try:
+            res = self.index.query(jnp.asarray(buf), donate=True,
+                                   k_neighbors=self.k_neighbors)
+        except BaseException:
+            # a failed query step must not orphan the handles (result()
+            # would spin forever on an empty queue): requeue and surface
+            self._pending[:0] = handles
+            self._pending_q[:0] = rows
+            raise
         dt = time.monotonic() - t0
 
         for i, h in enumerate(handles):
-            h.gid = int(res.best_gid[i])
-            h.dist = float(res.best_dist[i])
+            h.gids = res.topk_gid[i].copy()
+            h.dists = res.topk_dist[i].copy()
+            h.gid = int(h.gids[0])
+            h.dist = float(h.dists[0])
             h.n_within_cr = int(res.n_within_cr[i])
             h.fq = int(res.fq[i])
             h.done = True

@@ -74,19 +74,103 @@ def test_bucket_search_matches_ref(R, N, d, L):
     np.testing.assert_allclose(np.asarray(best_k), np.asarray(best_r),
                                rtol=1e-5, atol=1e-5)
     np.testing.assert_array_equal(np.asarray(cnt_k), np.asarray(cnt_r))
-    # gid may differ only when two points tie on distance within fp noise
-    ties = np.isclose(np.asarray(best_k), np.asarray(best_r), rtol=1e-4)
-    assert np.mean(np.asarray(gid_k)[ties] == np.asarray(gid_r)[ties]) > 0.99
+    # (dist, gid) lex order makes tie-breaks deterministic in both paths
+    np.testing.assert_array_equal(np.asarray(gid_k), np.asarray(gid_r))
+
+
+@pytest.mark.parametrize("K", [1, 5, 32])
+@pytest.mark.parametrize("R,N,d,L", [(128, 384, 16, 8), (256, 256, 32, 4)])
+def test_bucket_search_topk_matches_ref(K, R, N, d, L):
+    """Top-K parity across point tiles, including rows with fewer than K
+    hits (sentinel-padded tails must agree too)."""
+    args = _bucket_case(jax.random.PRNGKey(K * 7 + R), R, N, d, L,
+                        frac_match=0.5)
+    cr2 = 40.0  # wide threshold so most rows have many hits
+    td_k, tg_k, c_k = ops.bucket_search(*args, cr2, L=L, k=K)
+    td_r, tg_r, c_r = ref.bucket_search_ref(*args, cr2, L=L, K=K)
+    assert td_k.shape == (R, K) and tg_k.shape == (R, K)
+    np.testing.assert_allclose(np.asarray(td_k), np.asarray(td_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(tg_k), np.asarray(tg_r))
+    np.testing.assert_array_equal(np.asarray(c_k), np.asarray(c_r))
+    # ascending (dist, gid) lex order with sentinel tails
+    td = np.asarray(td_k)
+    assert np.all(np.diff(td, axis=1) >= 0)
+    short = np.asarray(c_r) < K
+    if short.any():
+        i = np.nonzero(short)[0][0]
+        assert td[i, -1] == np.float32(np.finfo(np.float32).max)
+        assert np.asarray(tg_k)[i, -1] == np.iinfo(np.int32).max
+
+
+def test_bucket_search_topk_ties():
+    """Duplicated points tie exactly on distance; the accumulator must
+    order them by gid and not drop or double-count any."""
+    R, N, L, K = 128, 256, 1, 5
+    q = jnp.zeros((R, 8))
+    p = jnp.tile(jnp.ones((1, 8)), (N, 1))      # all at distance sqrt(8)
+    qb = jnp.zeros((R, 2), jnp.int32)
+    pb = jnp.zeros((N, 2), jnp.int32)
+    probe = jnp.ones((R, L), jnp.int32)
+    pv = jnp.ones((N,), jnp.int32)
+    gid = jnp.arange(N, dtype=jnp.int32)[::-1].copy()   # descending
+    args = (q, jnp.sum(q * q, -1), qb, probe, p, jnp.sum(p * p, -1), pb,
+            gid, pv)
+    td_k, tg_k, cnt = ops.bucket_search(*args, 100.0, L=L, k=K)
+    td_r, tg_r, _ = ref.bucket_search_ref(*args, 100.0, L=L, K=K)
+    np.testing.assert_array_equal(np.asarray(tg_k), np.asarray(tg_r))
+    np.testing.assert_array_equal(np.asarray(tg_k)[0], np.arange(K))
+    assert np.all(np.asarray(cnt) == N)
 
 
 def test_bucket_search_no_matches():
     R, N, d, L = 128, 128, 8, 2
     args = list(_bucket_case(jax.random.PRNGKey(0), R, N, d, L))
     args[3] = jnp.zeros_like(args[3])  # probe nothing
-    best, gid, cnt = ops.bucket_search(*args, 1.0, L=L)
+    best, gid, cnt = ops.bucket_search(*args, 1.0, L=L, k=4)
     assert np.all(np.asarray(best) == np.float32(np.finfo(np.float32).max))
     assert np.all(np.asarray(gid) == np.iinfo(np.int32).max)
     assert np.all(np.asarray(cnt) == 0)
+
+
+def test_bucket_search_no_rxn_buffer():
+    """The streaming-reduction contract: per-grid-step VMEM residency is
+    a function of (d, L, K) only, and the kernel's HBM outputs are
+    O(R*K) -- no O(R*N) distance matrix anywhere."""
+    from repro.kernels.bucket_search import vmem_bytes_per_step
+    d, L, K = 64, 16, 32
+    step = vmem_bytes_per_step(d, L, K)
+    assert step < 4 * 2 ** 20  # well inside the ~16 MB VMEM budget
+    # independent of problem size by construction (no R/N argument), and
+    # the traced computation carries no (R, N)-shaped value anywhere --
+    # walk every eqn output shape recursively through sub-jaxprs (pjit,
+    # pallas_call kernel body), where the tiles are (TILE_R, TILE_N).
+    def _subjaxprs(params):
+        for v in params.values():
+            for x in (v if isinstance(v, (list, tuple)) else (v,)):
+                inner = getattr(x, "jaxpr", None)     # ClosedJaxpr
+                if inner is not None and hasattr(inner, "eqns"):
+                    yield inner
+                elif hasattr(x, "eqns"):              # raw Jaxpr
+                    yield x
+
+    def shapes(jxp):
+        for eqn in jxp.eqns:
+            for var in eqn.outvars:
+                yield getattr(var.aval, "shape", ())
+            for sub in _subjaxprs(eqn.params):
+                yield from shapes(sub)
+
+    R, N = 256, 1024
+    args = _bucket_case(jax.random.PRNGKey(1), R, N, d, L)
+    jaxpr = jax.make_jaxpr(
+        lambda *a: ops.bucket_search(*a, 2.5, L=L, k=K))(*args)
+    assert (R, N) not in set(shapes(jaxpr.jaxpr))
+    # positive control: the same walk DOES see the dense (R, N) matrix in
+    # the jnp oracle, so the assertion above has teeth
+    jaxpr_ref = jax.make_jaxpr(
+        lambda *a: ref.bucket_search_ref(*a, 2.5, L=L, K=K))(*args)
+    assert (R, N) in set(shapes(jaxpr_ref.jaxpr))
 
 
 # ---------------------------------------------------------------------------

@@ -164,6 +164,63 @@ print("OK")
     assert "OK" in out
 
 
+def test_topk_matches_single_machine_reference():
+    """The tentpole acceptance contract for native top-K:
+      * the distributed top-K (all_gather + K-way merge) equals the
+        single-machine LSH reference exactly (gids and distances);
+      * recall@10 vs brute force matches the reference within noise
+        (identical candidate sets -> identical recall);
+      * K=1 reproduces the old best-1 results exactly (compat views);
+      * the service threads top-K through its handles."""
+    out = _run(COMMON + """
+from repro.core import (lsh_topk_reference, nearest_neighbors, recall_at_k,
+                        simulate)
+from repro.serving import ShardedLSHService
+
+idx = DistributedLSHIndex(cfg, mesh, use_kernel=True)
+idx.build(data)
+qr10 = idx.query(queries, k_neighbors=10)
+refd, refg = lsh_topk_reference(cfg, data, queries, 10)
+np.testing.assert_array_equal(qr10.topk_gid, refg)
+fin = np.isfinite(qr10.topk_dist)
+np.testing.assert_array_equal(fin, np.isfinite(refd))
+np.testing.assert_allclose(qr10.topk_dist[fin], refd[fin],
+                           rtol=1e-4, atol=1e-5)
+
+# recall@10 of the distributed path == the single-machine reference
+_, true_idx = nearest_neighbors(np.asarray(data), np.asarray(queries), 10)
+rec_dist = recall_at_k(qr10.topk_gid, true_idx)
+rep = simulate(cfg, data, queries, compute_recall=True, k_neighbors=10)
+assert abs(rec_dist - rep.recall_at_k) < 1e-9, (rec_dist, rep.recall_at_k)
+
+# K=1 == old best-1 contract == column 0 of any larger K
+qr1 = idx.query(queries, k_neighbors=1)
+np.testing.assert_array_equal(qr1.best_gid, qr10.topk_gid[:, 0])
+np.testing.assert_allclose(qr1.best_dist, qr10.topk_dist[:, 0], rtol=1e-6)
+np.testing.assert_array_equal(qr1.n_within_cr, qr10.n_within_cr)
+# finite entries per row == min(K, candidates emitted)
+np.testing.assert_array_equal(np.isfinite(qr10.topk_dist).sum(1),
+                              np.minimum(10, qr10.n_within_cr))
+
+# service front-end threads K through its handles.  Bucket flushes
+# restart qids per bucket (pad-to-bucket contract), so compare against
+# direct per-bucket queries, not the one-shot m=256 batch.
+svc = ShardedLSHService(idx, bucket_size=64, k_neighbors=10)
+handles = svc.submit_batch(np.asarray(queries)); svc.drain()
+gids = np.stack([h.gids for h in handles])
+dists = np.stack([h.dists for h in handles])
+for b in range(4):
+    qb = idx.query(queries[b * 64:(b + 1) * 64], k_neighbors=10)
+    np.testing.assert_array_equal(gids[b * 64:(b + 1) * 64], qb.topk_gid)
+    np.testing.assert_allclose(dists[b * 64:(b + 1) * 64], qb.topk_dist,
+                               rtol=1e-6)
+assert handles[0].gid == int(handles[0].gids[0])
+assert gids.shape == (256, 10)
+print("OK", rec_dist)
+""")
+    assert "OK" in out
+
+
 def test_service_deadline_flush():
     """A missed latency deadline flushes a partial bucket on next entry."""
     out = _run(COMMON + """
