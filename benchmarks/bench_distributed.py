@@ -2,7 +2,7 @@
 analytic simulator) at small device counts, plus the Pallas-kernel search
 path vs jnp. Runs in a subprocess with 8 host devices.
 
-Two regimes:
+Three regimes:
   batch     -- one-shot build + batch query (the paper's MapReduce view):
                build/query time, live routed rows, static all_to_all wire
                bytes per scheme (the TPU-implementation view of Fig 4.1).
@@ -10,9 +10,16 @@ Two regimes:
                insert+query stream; reports steady-state throughput
                (queries/s, inserts/s), per-flush latency, routed
                rows/query and the per-shard load-balance trajectory.
+  T-sweep   -- the fused multi-table view (``tables_sweep``, also
+               ``--tables 1,2,4`` from the CLI): per table count, warm
+               build/query latency, routed rows/query, recall@10 and the
+               per-step collective count (constant in T by construction;
+               the sweep asserts the fused result equals the
+               single-machine union reference).
 """
 from __future__ import annotations
 
+import argparse
 import os
 import subprocess
 import sys
@@ -106,21 +113,84 @@ for scheme in (Scheme.SIMPLE, Scheme.LAYERED):
 """
 
 
-def main(smoke: bool = False):
-    sizes = dict(n=2048, m=256, steps=2, ins=128, bucket=64) if smoke \
-        else dict(n=16384, m=1024, steps=8, ins=512, bucket=128)
+_TABLES_SCRIPT = """
+import time
+import jax, numpy as np
+import jax.numpy as jnp
+from repro.compat import make_mesh
+from repro.core import (LSHConfig, Scheme, DistributedLSHIndex,
+                        lsh_topk_reference, nearest_neighbors, recall_at_k,
+                        simulate, COLLECTIVES_PER_QUERY)
+
+N, M, D, K = {n}, {m}, 64, 10
+TABLES = {tables}
+from repro.data import planted_random
+data, queries, _ = planted_random(n=N, m=M, d=D, r=0.3, seed=0)
+data, queries = jnp.asarray(data), jnp.asarray(queries)
+mesh = make_mesh((8,), ("shard",))
+_, true_idx = nearest_neighbors(np.asarray(data), np.asarray(queries), K)
+print("scheme,T,build_ms,query_warm_ms,rows_per_query,recall_at_10,"
+      "collectives_per_query,union_exact")
+for T in TABLES:
+    cfg = LSHConfig(d=D, k=10, W=1.0, r=0.3, c=2.0, L=16, n_shards=8,
+                    scheme=Scheme.LAYERED, seed=0, n_tables=T)
+    idx = DistributedLSHIndex(cfg, mesh, k_neighbors=K)
+    t0 = time.monotonic(); br = idx.build(data); t_b = time.monotonic() - t0
+    idx.query(queries)                       # warm the compiled path
+    t0 = time.monotonic(); qr = idx.query(queries); t_q = time.monotonic()-t0
+    assert br.drops == 0 and qr.drops == 0, (T, br.drops, qr.drops)
+    rec = recall_at_k(qr.topk_gid, true_idx)
+    # the fused T-table result must equal the single-machine UNION
+    # reference exactly (same candidates, same (dist, gid) merge order)
+    _, refg = lsh_topk_reference(cfg, data, queries, K)
+    exact = bool(np.array_equal(qr.topk_gid, refg))
+    rep = simulate(cfg, data, queries)
+    assert abs(qr.fq.mean() - rep.fq_mean) < 1e-6
+    print(f"layered,{{T}},{{t_b*1e3:.1f}},{{t_q*1e3:.1f}},"
+          f"{{qr.fq.mean():.2f}},{{rec:.3f}},{{COLLECTIVES_PER_QUERY}},"
+          f"{{exact}}")
+    assert exact, T
+"""
+
+
+def _run_script(script: str, timeout: int = 1800) -> str:
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env["PYTHONPATH"] = os.path.join(repo, "src")
     out = subprocess.run(
-        [sys.executable, "-c", textwrap.dedent(_SCRIPT.format(**sizes))],
-        capture_output=True, text=True, env=env, timeout=1800)
+        [sys.executable, "-c", textwrap.dedent(script)],
+        capture_output=True, text=True, env=env, timeout=timeout)
     if out.returncode != 0:
         raise RuntimeError(out.stderr[-2000:])
     print(out.stdout.strip())
     return out.stdout
 
 
+def main(smoke: bool = False):
+    sizes = dict(n=2048, m=256, steps=2, ins=128, bucket=64) if smoke \
+        else dict(n=16384, m=1024, steps=8, ins=512, bucket=128)
+    return _run_script(_SCRIPT.format(**sizes))
+
+
+def tables_sweep(smoke: bool = False, tables=(1, 2, 4)):
+    """Fused multi-table sweep: latency / traffic / recall@10 vs T, with
+    an exact-agreement check against the single-machine union reference
+    and the constant per-step collective count."""
+    sizes = dict(n=1024, m=64) if smoke else dict(n=4096, m=256)
+    return _run_script(_TABLES_SCRIPT.format(tables=tuple(tables), **sizes))
+
+
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--tables", default=None,
+                    help="comma list, e.g. 1,2,4: run ONLY the fused "
+                         "multi-table sweep at those table counts")
+    args = ap.parse_args()
+    if args.tables:
+        tables_sweep(smoke=args.smoke,
+                     tables=tuple(int(t) for t in args.tables.split(",")))
+    else:
+        main(smoke=args.smoke)
+        tables_sweep(smoke=args.smoke)

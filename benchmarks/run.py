@@ -95,6 +95,10 @@ def smoke(json_out: str | None = None):
     _section("smoke: distributed index + streaming serve (8 host devices)")
     rec.run("distributed_streaming", lambda: bench_distributed.main(
         smoke=True))
+    _section("smoke: fused multi-table T-sweep (8 host devices)")
+    rec.run("distributed_tables_sweep",
+            lambda: bench_distributed.tables_sweep(smoke=True,
+                                                   tables=(1, 2, 4)))
     print("\nsmoke OK: all benchmark scripts import and run")
     if json_out:
         rec.dump(json_out)
@@ -162,6 +166,12 @@ def main(argv=None):
         t0 = time.monotonic()
         rec.run("distributed_streaming", bench_distributed.main)
         print(f"distributed,{(time.monotonic() - t0) * 1e6:.0f},devices=8")
+
+        _section("fused multi-table T-sweep (8 host devices, subprocess)")
+        t0 = time.monotonic()
+        rec.run("distributed_tables_sweep",
+                lambda: bench_distributed.tables_sweep(tables=(1, 2, 4)))
+        print(f"tables_sweep,{(time.monotonic() - t0) * 1e6:.0f},T=1/2/4")
 
         import os
         from benchmarks import roofline

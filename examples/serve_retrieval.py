@@ -35,6 +35,9 @@ def main():
     ap.add_argument("--insert-size", type=int, default=128)
     ap.add_argument("--k-neighbors", type=int, default=5,
                     help="top-K results returned per query")
+    ap.add_argument("--tables", type=int, default=1,
+                    help="fused hash tables (union recall lever; the "
+                         "collective count per step does not change)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=True)
@@ -52,7 +55,8 @@ def main():
                                  r=0.2, L=16, k=8, W=0.5,
                                  scheme=Scheme.LAYERED,
                                  bucket_size=args.batch_size,
-                                 k_neighbors=args.k_neighbors)
+                                 k_neighbors=args.k_neighbors,
+                                 n_tables=args.tables)
     print(f"[build] indexed {args.docs} docs in "
           f"{time.monotonic() - t0:.1f}s "
           f"(data load max={svc.index.build_result.data_load.max()})")

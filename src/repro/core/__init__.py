@@ -10,22 +10,27 @@ Layers:
 """
 from repro.core.config import LSHConfig, Scheme, collision_probability, p_collision
 from repro.core.hashing import (HashParams, gamma, gh, g_of, hash_h,
-                                pack_buckets, sample_params, shard_key,
-                                shard_of)
-from repro.core.offsets import batch_query_offsets, query_offsets
-from repro.core.accounting import TrafficReport
+                                pack_buckets, sample_params,
+                                sample_table_params, shard_key, shard_of,
+                                table_key)
+from repro.core.offsets import (batch_query_offsets, query_offsets,
+                                table_base_key)
+from repro.core.accounting import (COLLECTIVES_PER_INSERT,
+                                   COLLECTIVES_PER_QUERY, TrafficReport)
 from repro.core.simulate import (StreamReport, lsh_topk_reference,
                                  recall_at_k, simulate, simulate_stream)
 from repro.core.ref_search import nearest_neighbor, nearest_neighbors
-from repro.core.index import DistributedLSHIndex
+from repro.core.index import DistributedLSHIndex, first_occurrence_mask
 
 __all__ = [
     "LSHConfig", "Scheme", "collision_probability", "p_collision",
     "HashParams", "gamma", "gh", "g_of", "hash_h", "pack_buckets",
-    "sample_params", "shard_key", "shard_of",
-    "batch_query_offsets", "query_offsets",
-    "TrafficReport", "simulate", "StreamReport", "simulate_stream",
+    "sample_params", "sample_table_params", "table_key", "shard_key",
+    "shard_of",
+    "batch_query_offsets", "query_offsets", "table_base_key",
+    "TrafficReport", "COLLECTIVES_PER_INSERT", "COLLECTIVES_PER_QUERY",
+    "simulate", "StreamReport", "simulate_stream",
     "lsh_topk_reference", "recall_at_k",
     "nearest_neighbor", "nearest_neighbors",
-    "DistributedLSHIndex",
+    "DistributedLSHIndex", "first_occurrence_mask",
 ]

@@ -9,6 +9,10 @@ All parameters follow the paper's notation:
   L  -- number of entropy-LSH query offsets
   D  -- second-layer bin width  (G(v) = floor((alpha.v+beta)/D));
         Corollary 12 chooses D = Theta(sqrt(k))
+  T  -- number of independent hash tables (``n_tables``); the classic
+        multi-table union recall lever.  Each table samples its own
+        (A, b, alpha, beta) from a split key; the fused index hosts all
+        T tables behind ONE collective per phase.
 """
 from __future__ import annotations
 
@@ -45,6 +49,11 @@ class LSHConfig:
     scheme: Scheme = Scheme.LAYERED
     D: Optional[float] = None  # default Theta(sqrt(k)) per Corollary 12
     seed: int = 0
+    # Number of independent hash tables fused into one index.  Table 0
+    # uses the same parameter/offset derivation as a single-table config
+    # (T=1 reproduces single-table results bit-for-bit); tables are a
+    # nested prefix sequence, so raising T only adds candidates.
+    n_tables: int = 1
     # Probe generation: "entropy" = Panigrahy sphere offsets (the paper's
     # default); "mplsh" = Multi-Probe query-directed probing (Lv et al.;
     # the paper uses it as the first layer for Wiki, section 4.2). For
@@ -62,6 +71,8 @@ class LSHConfig:
             raise ValueError("approximation ratio c must be > 1")
         if self.L < 1 or self.k < 1 or self.n_shards < 1:
             raise ValueError("L, k, n_shards must be >= 1")
+        if self.n_tables < 1:
+            raise ValueError("n_tables must be >= 1")
 
     # ------------------------------------------------------------------
     # Theoretical quantities from the paper, used for capacity sizing and
@@ -75,7 +86,8 @@ class LSHConfig:
         return 2.0 * (1.0 + 4.0 / (self.c * self.W)) * self.k / self.D + 1.0
 
     def pairs_per_query(self) -> float:
-        """Expected routed rows per query under each scheme.
+        """Expected routed rows per query under each scheme, summed over
+        the T fused tables (each table ships its own distinct Keys).
 
         SIMPLE ships one row per *distinct H bucket* which is at most L;
         LAYERED ships f_q = O(k/D) rows (Theorem 8).  SUM/CAUCHY behave
@@ -84,8 +96,8 @@ class LSHConfig:
         SIMPLE level to be safe.
         """
         if self.scheme == Scheme.LAYERED:
-            return min(float(self.L), self.fq_bound())
-        return float(self.L)
+            return self.n_tables * min(float(self.L), self.fq_bound())
+        return self.n_tables * float(self.L)
 
 
 def p_collision(z: float) -> float:

@@ -45,6 +45,17 @@ class HashParams:
         return cls(*children)
 
 
+def table_key(key: jax.Array, table: int) -> jax.Array:
+    """RNG key for one table of a multi-table config.
+
+    Table 0 uses ``key`` itself, so a T-table index reproduces the
+    single-table parameter stream bit-for-bit in its first table, and the
+    table sequence is a nested prefix (raising T never resamples the
+    existing tables).
+    """
+    return key if table == 0 else jax.random.fold_in(key, table)
+
+
 def sample_params(key: jax.Array, cfg: LSHConfig) -> HashParams:
     kA, kb, ka, kB, kc, km, kp = jax.random.split(key, 7)
     A = jax.random.normal(kA, (cfg.d, cfg.k), dtype=jnp.float32)
@@ -62,6 +73,19 @@ def sample_params(key: jax.Array, cfg: LSHConfig) -> HashParams:
     pack_add = jax.random.randint(kp, (2,), 0, jnp.iinfo(jnp.int32).max,
                                   dtype=jnp.int32).astype(jnp.uint32)
     return HashParams(A, b, alpha, beta, alpha_cauchy, pack_mult, pack_add)
+
+
+def sample_table_params(key: jax.Array, cfg: LSHConfig) -> list[HashParams]:
+    """One independent ``HashParams`` per fused table (length n_tables).
+
+    Entry 0 equals ``sample_params(key, cfg)`` exactly; entry t draws from
+    ``table_key(key, t)``.  Each table also gets its own bucket-packing
+    multipliers, so packed ids from different tables collide only with
+    the generic 2^-64 chance -- the explicit table mask in the search
+    path removes even that.
+    """
+    return [sample_params(table_key(key, t), cfg)
+            for t in range(cfg.n_tables)]
 
 
 # ---------------------------------------------------------------------------

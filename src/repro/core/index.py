@@ -2,20 +2,32 @@
 
 Machines = devices along one mesh axis ("shard").  The MapReduce shuffle /
 Active-DHT send becomes a fixed-capacity ``jax.lax.all_to_all`` inside
-``shard_map``:
+``shard_map``.  The index hosts ``cfg.n_tables`` (T) independent hash
+tables FUSED into one routed store -- every phase issues exactly ONE
+cross-shard collective regardless of T (the paper's network-efficiency
+argument applied to our own wire):
 
-  insert: every data point p ships one row  (GH(p), <H(p), p, gid>)
-          and lands in a free slot of the destination shard's append
-          region (tombstoned slots are reused, occupancy is accounted)
-  delete: gids are broadcast; owning shards tombstone their rows and the
-          bucket scan honours the mask
-  query:  every query q ships f_q rows      (GH(q+delta_i), <q, qid>)
-          -- one per DISTINCT Key among its offsets (Theorem 8 bounds f_q)
-  search: the receiving shard regenerates the offsets from qid (consistent
-          RNG), selects those whose Key == its own id, and scans its stored
-          rows for bucket-equal points within distance cr (Fig 3.2 Reduce).
-  return: each shard's per-qid local top-K is combined across shards by
-          an all_gather + static K-way merge (dedup by gid).
+  insert: every data point p ships T rows (GH_t(p), <H_t(p), p, gid, t>)
+          -- one per table -- through a single fused all_to_all ([x |
+          packed | gid | table] packed into one int32 payload) and lands
+          in free slots of the destination shard's append region
+          (tombstoned slots are reused, occupancy is accounted)
+  delete: gids are broadcast; owning shards tombstone all T copies and
+          the bucket scan honours the mask
+  query:  every query q ships f_q rows (GH_t(q+delta^t_i), <q, qid, t>)
+          -- one per DISTINCT Key per table (Theorem 8 bounds the
+          per-table count) -- again through ONE fused all_to_all
+  search: the receiving shard regenerates the offsets from (qid, table)
+          (consistent RNG), selects those whose Key == its own id, and
+          scans its stored rows for bucket-equal SAME-TABLE points within
+          distance cr (Fig 3.2 Reduce, with a table mask)
+  return: each shard merges its local per-qid candidates across tables,
+          then a single routed all_to_all ships every qid's local top-K
+          (plus its emit count) ONLY to the qid's owner shard, which
+          K-way merges the S contributions (dedup by gid).  This replaces
+          the old all_gather + replicated merge: the receive volume drops
+          from O(S*m*K) to O(m*K) per shard and the psum for emit counts
+          rides inside the same collective.
 
 ``build`` is a thin wrapper: reset the store, then ``insert`` the whole
 dataset.  The index is therefore a *streaming* service primitive -- the
@@ -25,8 +37,13 @@ store capacity) with donated store buffers, so steady-state serving does
 no retracing and no store copies.
 
 Static capacities are derived from the scheme's theoretical row bound
-(LSHConfig.pairs_per_query) times a slack factor; overflow is counted and
-must be zero for a valid run (tests assert this).
+(LSHConfig.pairs_per_query, which sums over tables) times a slack factor;
+overflow is counted and must be zero for a valid run (tests assert this).
+
+With ``n_tables=1`` (and any K) the whole pipeline reproduces the
+single-table index bit-for-bit: table 0 derives its parameters and
+offsets from the same keys, rows route in the same order, and the return
+merge applies the same (gid, dist) sort semantics.
 """
 from __future__ import annotations
 
@@ -42,9 +59,9 @@ from jax.sharding import Mesh
 
 from repro.compat import shard_map
 from repro.core.config import LSHConfig, Scheme
-from repro.core.hashing import (hash_h, pack_buckets, sample_params,
+from repro.core.hashing import (hash_h, pack_buckets, sample_table_params,
                                 shard_key)
-from repro.core.offsets import query_offsets
+from repro.core.offsets import query_offsets, table_base_key
 from repro.core.ref_search import topk_sort_jnp
 
 INF = jnp.float32(jnp.finfo(jnp.float32).max)
@@ -90,10 +107,54 @@ def scatter_rows(slot: jax.Array, keep: jax.Array, rows: jax.Array,
     return buf[:n_slots]
 
 
+def first_occurrence_mask(keys: jax.Array, valid: jax.Array) -> jax.Array:
+    """True on the FIRST live row of each key value, in index order.
+
+    Sort-based (O(R log R) work, O(R) memory) -- replaces the old O(R^2)
+    pairwise-equality matrix.  The stable sort preserves index order
+    within equal keys, so ties resolve exactly like the pairwise
+    formulation did.  Keys of invalid rows are ignored; the returned mask
+    is False there.
+    """
+    R = keys.shape[0]
+    big = jnp.where(valid, keys, jnp.iinfo(jnp.int32).max)
+    order = jnp.argsort(big)
+    s = big[order]
+    first_sorted = jnp.concatenate(
+        [jnp.ones((1,), bool), s[1:] != s[:-1]])
+    first = jnp.zeros((R,), bool).at[order].set(first_sorted)
+    return first & valid
+
+
+def merge_topk(cand_d: jax.Array, cand_g: jax.Array,
+               k: int) -> tuple[jax.Array, jax.Array]:
+    """(rows, C) masked (dist, gid) candidates -> the k best per row with
+    gid dedup: sort by (gid, dist), blank repeated gids, re-sort by
+    (dist, gid).  Sentinel (INF, IMAX) pairs are fixed points, so rows
+    with fewer than k real candidates pad with sentinels."""
+    sg, sd = jax.lax.sort((cand_g, cand_d), dimension=1, num_keys=2)
+    dup = jnp.concatenate(
+        [jnp.zeros((sg.shape[0], 1), bool), sg[:, 1:] == sg[:, :-1]],
+        axis=1)
+    sd = jnp.where(dup, INF, sd)
+    sg = jnp.where(dup, IMAX, sg)
+    gd, gg = jax.lax.sort((sd, sg), dimension=1, num_keys=2)
+    return gd[:, :k], gg[:, :k]
+
+
 def _a2a(x: jax.Array, axis_name: str) -> jax.Array:
     """Tiled all_to_all over the leading (S*C) dimension."""
     return jax.lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0,
                               tiled=True)
+
+
+def _f2i(x: jax.Array) -> jax.Array:
+    """Bit-exact float32 -> int32 view (payload packing for fused a2a)."""
+    return jax.lax.bitcast_convert_type(x, jnp.int32)
+
+
+def _i2f(x: jax.Array) -> jax.Array:
+    return jax.lax.bitcast_convert_type(x, jnp.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -102,10 +163,16 @@ def _a2a(x: jax.Array, axis_name: str) -> jax.Array:
 
 @dataclasses.dataclass
 class StoreState:
-    """Per-shard routed append regions (leading dim = mesh shard axis)."""
+    """Per-shard routed append regions (leading dim = mesh shard axis).
+
+    One region hosts the rows of ALL T tables, interleaved: each stored
+    row carries the table it belongs to, and the bucket scan only matches
+    probes of the same table.
+    """
     x: jax.Array          # (S, cap, d) stored points
     packed: jax.Array     # (S, cap, 2) packed H buckets (uint32)
     gid: jax.Array        # (S, cap) global data ids (IMAX = empty)
+    table: jax.Array      # (S, cap) int32 table id of each row
     valid: jax.Array      # (S, cap) bool liveness (False = free/tombstone)
 
     @property
@@ -118,8 +185,9 @@ class BuildResult:
     store_x: jax.Array        # (S, cap, d) per-shard stored points
     store_packed: jax.Array   # (S, cap, 2) packed H buckets
     store_gid: jax.Array      # (S, cap) global data ids
+    store_table: jax.Array    # (S, cap) table id per row
     store_valid: jax.Array    # (S, cap) bool
-    data_load: np.ndarray     # (S,) live rows stored per shard
+    data_load: np.ndarray     # (S,) live rows stored per shard (all tables)
     drops: int                # capacity overflow (must be 0)
 
 
@@ -127,14 +195,15 @@ class BuildResult:
 class InsertResult:
     shard_load: np.ndarray    # (S,) live rows stored per shard after merge
     drops: int                # dispatch + append-region overflow (0 = clean)
-    n_inserted: int           # rows actually stored this call
+    n_inserted: int           # points stored this call (table-0 copies)
+    rows_stored: int          # routed rows stored (n_inserted * T if clean)
     capacity: int             # per-shard append-region capacity
-    gid_start: int            # first auto-assigned gid of this batch
+    gid_start: Optional[int]  # minimum gid of this batch (None if empty)
 
 
 @dataclasses.dataclass
 class DeleteResult:
-    n_deleted: int            # rows tombstoned across all shards
+    n_deleted: int            # rows tombstoned across all shards/tables
     shard_load: np.ndarray    # (S,) live rows remaining per shard
 
 
@@ -143,8 +212,12 @@ class QueryResult:
     topk_dist: np.ndarray     # (m, K) ascending sqrt distances within cr
     #                           (inf-padded past the available candidates)
     topk_gid: np.ndarray      # (m, K) matching global ids (IMAX-padded)
-    n_within_cr: np.ndarray   # (m,) candidates emitted within cr
-    fq: np.ndarray            # (m,) rows shipped per query (Definition 7)
+    n_within_cr: np.ndarray   # (m,) candidates emitted within cr (summed
+    #                           over tables; a point stored in several
+    #                           tables counts once per table it hit in)
+    fq: np.ndarray            # (m,) rows shipped per query (Definition 7,
+    #                           summed over tables, post-capacity-drop --
+    #                           exactly what crossed the wire)
     query_load: np.ndarray    # (S,) live rows received per shard
     drops: int
 
@@ -164,10 +237,14 @@ class QueryResult:
 
 
 class DistributedLSHIndex:
-    """One hash table of the paper's scheme, distributed over a mesh axis.
+    """T fused hash tables of the paper's scheme over one mesh axis.
 
-    Multiple tables are independent instances (the paper: "multiple hash
-    tables can be obviously implemented in parallel").
+    The paper punts on multi-table ("multiple hash tables can be
+    obviously implemented in parallel"); implemented naively that costs T
+    all_to_alls per insert and query plus T all_gathers on the return
+    path.  Here all T tables share one routed store and one collective
+    per phase: rows carry a table tag, the bucket scan masks across
+    tables, and results union-merge per query.
     """
 
     def __init__(self, cfg: LSHConfig, mesh: Mesh, axis: str = "shard",
@@ -179,7 +256,8 @@ class DistributedLSHIndex:
         matrix never materialised.
 
         k_neighbors is the default K for ``query``: each query returns its
-        K best (dist, gid) pairs within cr, merged across shards."""
+        K best (dist, gid) pairs within cr, union-merged across shards
+        and tables."""
         if mesh.shape[axis] != cfg.n_shards:
             raise ValueError(
                 f"mesh axis {axis}={mesh.shape[axis]} != n_shards={cfg.n_shards}")
@@ -193,7 +271,12 @@ class DistributedLSHIndex:
         self.k_neighbors = k_neighbors
         key = jax.random.PRNGKey(cfg.seed)
         kp, kq = jax.random.split(key)
-        self.params = sample_params(kp, cfg)
+        # per-table (A, b, alpha, beta, packing) from split keys; table 0
+        # == the single-table parameter stream (bit-for-bit)
+        self.table_params = sample_table_params(kp, cfg)
+        self.params = self.table_params[0]
+        self.table_keys = [table_base_key(kq, t)
+                           for t in range(cfg.n_tables)]
         self.base_key = kq
         self.store: Optional[StoreState] = None
         self._shard_load = np.zeros((cfg.n_shards,), np.int64)
@@ -207,33 +290,35 @@ class DistributedLSHIndex:
     # ------------------------------------------------------------------
     # Capacity policy
     # ------------------------------------------------------------------
-    def _dispatch_capacity(self, n_local: int) -> int:
+    def _dispatch_capacity(self, n_rows: int) -> int:
         """Per-(source, dest) all_to_all block capacity for one insert.
 
+        ``n_rows`` counts ROUTED rows per source shard (points x tables).
         Locality-preserving placement is skewed by design (Table 1).  Bulk
         builds concentrate around the balanced share, so the slack-sized
         block suffices; small streaming batches do not, so their share is
-        doubled and clamped at n_local (all-to-one always fits: a small
+        doubled and clamped at n_rows (all-to-one always fits: a small
         batch can never overflow the dispatch, only the append region).
         """
         if self.cfg.data_capacity is not None:
             return self.cfg.data_capacity
         S = self.cfg.n_shards
-        base = max(8, int(math.ceil(n_local / S * self.slack)))
-        if n_local > 64 * S:          # bulk regime: slack-share sizing
+        base = max(8, int(math.ceil(n_rows / S * self.slack)))
+        if n_rows > 64 * S:           # bulk regime: slack-share sizing
             return base
-        return min(n_local, 2 * base)
+        return min(n_rows, 2 * base)
 
-    def _store_capacity(self, n_live: int) -> int:
-        """Per-shard append-region capacity for a target live row count."""
+    def _store_capacity(self, n_rows: int) -> int:
+        """Per-shard append-region capacity for a target live ROW count
+        (rows = points x n_tables)."""
         S = self.cfg.n_shards
-        return max(8, int(math.ceil(n_live / S * self.slack)))
+        return max(8, int(math.ceil(n_rows / S * self.slack)))
 
     def _query_capacity(self, m_local: int) -> int:
         if self.cfg.query_capacity is not None:
             return self.cfg.query_capacity
         S = self.cfg.n_shards
-        rows = m_local * self.cfg.pairs_per_query()
+        rows = m_local * self.cfg.pairs_per_query()   # summed over tables
         return max(8, int(math.ceil(rows / S * self.slack)))
 
     # ------------------------------------------------------------------
@@ -250,6 +335,7 @@ class DistributedLSHIndex:
             x=alloc((S, capacity, cfg.d), jnp.float32, 0.0),
             packed=alloc((S, capacity, 2), jnp.uint32, 0),
             gid=alloc((S, capacity), jnp.int32, IMAX),
+            table=alloc((S, capacity), jnp.int32, 0),
             valid=alloc((S, capacity), jnp.bool_, False),
         )
         self._shard_load = np.zeros((S,), np.int64)
@@ -269,31 +355,52 @@ class DistributedLSHIndex:
             return jnp.pad(a, widths, constant_values=fill)
         self.store = StoreState(
             x=pad(st.x, 0.0), packed=pad(st.packed, 0),
-            gid=pad(st.gid, IMAX), valid=pad(st.valid, False))
+            gid=pad(st.gid, IMAX), table=pad(st.table, 0),
+            valid=pad(st.valid, False))
 
     # ------------------------------------------------------------------
-    # Insert: route new rows through the GH all_to_all into free slots
+    # Insert: route T rows per point through ONE fused all_to_all into
+    # free slots of the table-tagged append regions
     # ------------------------------------------------------------------
     def _make_insert_fn(self, n_loc: int, Ci: int, cap: int):
-        cfg, params = self.cfg, self.params
-        S = cfg.n_shards
+        cfg = self.cfg
+        tparams = self.table_params
+        S, T, d = cfg.n_shards, cfg.n_tables, cfg.d
         axis = self.axis
 
-        def insert_shard(x_loc, gid_loc, valid_loc, sx, sp, sg, sv):
-            sx, sp, sg, sv = sx[0], sp[0], sg[0], sv[0]
-            hk = hash_h(params, x_loc, cfg.W)              # (n_loc, k)
-            packed = pack_buckets(params, hk)              # (n_loc, 2)
-            dest = jnp.mod(shard_key(params, cfg, hk), S).astype(jnp.int32)
-            slot, keep, d_drops = dispatch_slots(dest, valid_loc, S, Ci)
+        def insert_shard(x_loc, gid_loc, valid_loc, sx, sp, sg, stb, sv):
+            sx, sp = sx[0], sp[0]
+            sg, stb, sv = sg[0], stb[0], sv[0]
+            # ---- per-table hashing: T routed copies per point,
+            # point-major row order (table t of point i at row i*T+t) ----
+            packs, dests = [], []
+            for t in range(T):
+                hk = hash_h(tparams[t], x_loc, cfg.W)      # (n_loc, k)
+                packs.append(pack_buckets(tparams[t], hk))
+                dests.append(jnp.mod(shard_key(tparams[t], cfg, hk),
+                                     S).astype(jnp.int32))
+            packed = jnp.stack(packs, axis=1).reshape(n_loc * T, 2)
+            dest = jnp.stack(dests, axis=1).reshape(n_loc * T)
+            rows_x = jnp.repeat(x_loc, T, axis=0)          # (n_loc*T, d)
+            rows_g = jnp.repeat(gid_loc, T)
+            rows_t = jnp.tile(jnp.arange(T, dtype=jnp.int32), n_loc)
+            rows_v = jnp.repeat(valid_loc, T)
+            slot, keep, d_drops = dispatch_slots(dest, rows_v, S, Ci)
+
+            # ---- ONE fused all_to_all: [x | packed | gid | table] as a
+            # single int32 payload (table < 0 marks empty slots) ----
+            payload = jnp.concatenate([
+                _f2i(rows_x),
+                jax.lax.bitcast_convert_type(packed, jnp.int32),
+                rows_g[:, None], rows_t[:, None]], axis=1)
             nslots = S * Ci
-            bx = scatter_rows(slot, keep, x_loc, nslots, 0.0)
-            bp = scatter_rows(slot, keep, packed, nslots, 0)
-            bg = scatter_rows(slot, keep, gid_loc, nslots, IMAX)
-            bv = scatter_rows(slot, keep, keep.astype(jnp.int8), nslots, 0)
-            rx = _a2a(bx, axis)
-            rp = _a2a(bp, axis)
-            rg = _a2a(bg, axis)
-            rv = _a2a(bv, axis).astype(bool)               # (S*Ci,)
+            buf = scatter_rows(slot, keep, payload, nslots, -1)
+            r = _a2a(buf, axis)                            # (S*Ci, d+4)
+            rx = _i2f(r[:, :d])
+            rp = jax.lax.bitcast_convert_type(r[:, d:d + 2], jnp.uint32)
+            rg = r[:, d + 2]
+            rt = r[:, d + 3]
+            rv = rt >= 0
 
             # ---- append into free slots (tombstones are reused) ----
             n_free = jnp.sum(~sv).astype(jnp.int32)
@@ -314,22 +421,25 @@ class DistributedLSHIndex:
             nx = merge(sx, rx, 0.0)
             npk = merge(sp, rp, 0)
             ng = merge(sg, rg, IMAX)
+            nt = merge(stb, rt, 0)
             nv = merge(sv, fit, False)
             load = nv.sum().astype(jnp.int32)
             stored = fit.sum().astype(jnp.int32)
-            return (nx[None], npk[None], ng[None], nv[None], load[None],
-                    (d_drops + s_drops)[None], stored[None])
+            stored_t0 = (fit & (rt == 0)).sum().astype(jnp.int32)
+            return (nx[None], npk[None], ng[None], nt[None], nv[None],
+                    load[None], (d_drops + s_drops)[None], stored[None],
+                    stored_t0[None])
 
         spec = P(axis)
         return jax.jit(shard_map(
             insert_shard, mesh=self.mesh,
-            in_specs=(spec,) * 7, out_specs=(spec,) * 7,
+            in_specs=(spec,) * 8, out_specs=(spec,) * 9,
             check_vma=False,   # pallas out_shape has no vma annotation
-        ), donate_argnums=(3, 4, 5, 6))
+        ), donate_argnums=(3, 4, 5, 6, 7))
 
     def insert(self, points: jax.Array,
                gids: Optional[jax.Array] = None) -> InsertResult:
-        """Stream a batch of points into the routed store.
+        """Stream a batch of points into the routed store (T rows each).
 
         Any batch size is accepted: rows are padded to a multiple of
         n_shards with invalid rows (which ship nothing).  The store grows
@@ -342,24 +452,26 @@ class DistributedLSHIndex:
         ``self.build_result`` after every mutation instead of holding one.
         """
         cfg = self.cfg
-        S = cfg.n_shards
+        S, T = cfg.n_shards, cfg.n_tables
         n, d = points.shape
         if d != cfg.d:
             raise ValueError(f"points d={d} != cfg.d={cfg.d}")
-        gid_start = self._next_gid
         if gids is None:
+            gid_start = self._next_gid if n else None
             gids = jnp.arange(self._next_gid, self._next_gid + n,
                               dtype=jnp.int32)
             self._next_gid += n
         else:
             gids = jnp.asarray(gids, jnp.int32)
+            # the batch's actual minimum gid (NOT the unrelated _next_gid)
+            gid_start = int(np.asarray(gids).min()) if n else None
             self._next_gid = max(self._next_gid, int(np.asarray(gids).max())
                                  + 1) if n else self._next_gid
 
         if self.store is None:
-            self.init_store(self._store_capacity(n))
+            self.init_store(self._store_capacity(n * T))
         else:
-            needed = self._store_capacity(self._n_live + n)
+            needed = self._store_capacity(self._n_live + n * T)
             if needed > self.store.capacity:
                 # geometric growth: capacity is part of the compiled-fn
                 # cache key, so exact-fit growth would retrace every step
@@ -377,27 +489,29 @@ class DistributedLSHIndex:
             if pad else gids
         valid = jnp.arange(n_pad) < n
         n_loc = n_pad // S
-        Ci = self._dispatch_capacity(n_loc)
+        Ci = self._dispatch_capacity(n_loc * T)
 
         key = (n_loc, Ci, cap)
         fn = self._insert_fns.get(key)
         if fn is None:
             fn = self._insert_fns[key] = self._make_insert_fn(n_loc, Ci, cap)
-        nx, npk, ng, nv, load, drops, stored = fn(
-            x, g, valid, st.x, st.packed, st.gid, st.valid)
-        self.store = StoreState(x=nx, packed=npk, gid=ng, valid=nv)
+        nx, npk, ng, nt, nv, load, drops, stored, stored_t0 = fn(
+            x, g, valid, st.x, st.packed, st.gid, st.table, st.valid)
+        self.store = StoreState(x=nx, packed=npk, gid=ng, table=nt, valid=nv)
         n_drops = int(np.asarray(drops).sum())
-        n_stored = int(np.asarray(stored).sum())
+        rows_stored = int(np.asarray(stored).sum())
+        n_stored = int(np.asarray(stored_t0).sum())
         self._shard_load = np.asarray(load).astype(np.int64)
         self._drops += n_drops
-        self._n_live += n_stored
+        self._n_live += rows_stored
         return InsertResult(shard_load=np.asarray(load), drops=n_drops,
-                            n_inserted=n_stored, capacity=cap,
-                            gid_start=gid_start)
+                            n_inserted=n_stored, rows_stored=rows_stored,
+                            capacity=cap, gid_start=gid_start)
 
     # ------------------------------------------------------------------
     # Delete: tombstone rows by gid (honoured by the bucket scan; the
-    # slots become free and are reused by later inserts)
+    # slots become free and are reused by later inserts).  All T table
+    # copies of a gid are tombstoned.
     # ------------------------------------------------------------------
     def _make_delete_fn(self, n_del: int, cap: int):
         axis = self.axis
@@ -417,7 +531,11 @@ class DistributedLSHIndex:
         ), donate_argnums=(1,))
 
     def delete(self, gids) -> DeleteResult:
-        """Tombstone the given global ids (missing ids are ignored)."""
+        """Tombstone the given global ids (missing ids are ignored).
+
+        ``n_deleted`` counts tombstoned ROWS: deleting one point removes
+        its copy from every table (n_tables rows when none were dropped).
+        """
         if self.store is None:
             raise RuntimeError("insert() or build() first")
         gids = np.asarray(gids, np.int32).reshape(-1)
@@ -444,16 +562,18 @@ class DistributedLSHIndex:
     def build(self, data: jax.Array,
               capacity: Optional[int] = None) -> BuildResult:
         """(Re)build the index from scratch: reset the store, route every
-        data point to its home shard and store it.
+        data point's T table copies to their home shards and store them.
 
         Args:
           data: (n, d) global array; will be sharded over the mesh axis.
-          capacity: optional per-shard append-region pre-reservation (rows)
-            for a stream that will keep growing after the build.
+          capacity: optional per-shard append-region pre-reservation
+            (ROWS -- points x n_tables) for a stream that will keep
+            growing after the build.
         """
         n = data.shape[0]
         self._next_gid = 0
-        self.init_store(max(capacity or 0, self._store_capacity(n)))
+        self.init_store(max(capacity or 0,
+                            self._store_capacity(n * self.cfg.n_tables)))
         self.insert(data)
         return self.build_result
 
@@ -465,12 +585,12 @@ class DistributedLSHIndex:
         st = self.store
         return BuildResult(
             store_x=st.x, store_packed=st.packed, store_gid=st.gid,
-            store_valid=st.valid, data_load=self._shard_load,
-            drops=self._drops)
+            store_table=st.table, store_valid=st.valid,
+            data_load=self._shard_load, drops=self._drops)
 
     @property
     def n_live(self) -> int:
-        """Live (inserted and not deleted) rows in the store."""
+        """Live stored rows (points x tables, minus deletions)."""
         return self._n_live
 
     @property
@@ -483,20 +603,22 @@ class DistributedLSHIndex:
     # ------------------------------------------------------------------
     def _make_query_fn(self, m: int, cap: int, Cq: int, donate: bool,
                        K: int):
-        cfg, params, base_key = self.cfg, self.params, self.base_key
-        S, L = cfg.n_shards, cfg.L
+        cfg = self.cfg
+        tparams, tkeys = self.table_params, self.table_keys
+        S, L, T, d = cfg.n_shards, cfg.L, cfg.n_tables, cfg.d
         axis = self.axis
+        m_loc = m // S
         cr2 = jnp.float32((cfg.c * cfg.r) ** 2)
         use_kernel = self.use_kernel
 
-        def offsets_of(qid, q):
-            return query_offsets(base_key, qid, q, L, cfg.r)
+        def offsets_of(t, qid, q):
+            return query_offsets(tkeys[t], qid, q, L, cfg.r)
 
-        def keys_of(offs):
-            """Offsets (L, d) -> (Key, packedH) per offset."""
-            hk = hash_h(params, offs, cfg.W)            # (L, k)
-            packed = pack_buckets(params, hk)           # (L, 2)
-            keyv = shard_key(params, cfg, hk)           # (L,)
+        def keys_of(t, offs):
+            """Table-t offsets (L, d) -> (Key, packedH) per offset."""
+            hk = hash_h(tparams[t], offs, cfg.W)        # (L, k)
+            packed = pack_buckets(tparams[t], hk)       # (L, 2)
+            keyv = shard_key(tparams[t], cfg, hk)       # (L,)
             return keyv, packed
 
         def live_mask(keyv, packed):
@@ -508,43 +630,70 @@ class DistributedLSHIndex:
             return ~jnp.any(eq & earlier, axis=-1)      # (L,)
 
         def query_shard(q_loc, qid_loc, store_x, store_packed, store_gid,
-                        store_valid):
+                        store_table, store_valid):
             # stores arrive with a leading per-shard block dim of 1
             store_x, store_packed = store_x[0], store_packed[0]
             store_gid, store_valid = store_gid[0], store_valid[0]
+            store_table = store_table[0]
             me = jax.lax.axis_index(axis)
-            # ---- route ----
-            offs = jax.vmap(offsets_of)(qid_loc, q_loc)      # (m_loc, L, d)
-            keyv, packed = jax.vmap(keys_of)(offs)
-            live = jax.vmap(live_mask)(keyv, packed)         # (m_loc, L)
-            dest = jnp.mod(keyv, S).astype(jnp.int32)
-            rows_q = jnp.repeat(q_loc, L, axis=0)            # (m_loc*L, d)
-            rows_id = jnp.repeat(qid_loc, L)
+
+            # ---- route: T tables x L offsets per local query ----
+            key_ts, live_ts = [], []
+            for t in range(T):
+                offs = jax.vmap(
+                    lambda i, q, t=t: offsets_of(t, i, q))(qid_loc, q_loc)
+                keyv, packed = jax.vmap(
+                    lambda o, t=t: keys_of(t, o))(offs)
+                key_ts.append(keyv)                      # (m_loc, L)
+                live_ts.append(jax.vmap(live_mask)(keyv, packed))
+            keyv = jnp.stack(key_ts, axis=1)             # (m_loc, T, L)
+            live = jnp.stack(live_ts, axis=1)
+            dest = jnp.mod(keyv, S).astype(jnp.int32).reshape(-1)
+            rows_q = jnp.repeat(q_loc, T * L, axis=0)    # (m_loc*T*L, d)
+            rows_id = jnp.repeat(qid_loc, T * L)
+            rows_t = jnp.tile(
+                jnp.repeat(jnp.arange(T, dtype=jnp.int32), L), m_loc)
             slot, keep, drops = dispatch_slots(
-                dest.reshape(-1), live.reshape(-1), S, Cq)
+                dest, live.reshape(-1), S, Cq)
+            # Definition 7 on the wire: bill only rows that actually
+            # shipped (capacity-dropped rows cost nothing)
+            fq_local = keep.reshape(m_loc, T * L).sum(axis=1).astype(
+                jnp.int32)
+
+            # ---- ONE fused all_to_all: [q | qid | table] as int32 ----
+            payload = jnp.concatenate([
+                _f2i(rows_q), rows_id[:, None], rows_t[:, None]], axis=1)
             nslots = S * Cq
-            sq = scatter_rows(slot, keep, rows_q, nslots, 0.0)
-            sid = scatter_rows(slot, keep, rows_id, nslots, IMAX)
-            rq = _a2a(sq, axis)                               # (S*Cq, d)
-            rid = _a2a(sid, axis)                             # (S*Cq,)
+            sbuf = scatter_rows(slot, keep, payload, nslots, IMAX)
+            r = _a2a(sbuf, axis)                         # (S*Cq, d+2)
+            rq = _i2f(r[:, :d])
+            rid = r[:, d]
+            rtab = r[:, d + 1]
             rvalid = rid != IMAX
             recv_load = rvalid.sum().astype(jnp.int32)
-            fq_local = live.sum(axis=1).astype(jnp.int32)     # (m_loc,)
 
-            # Two rows of one query can land on the same shard when two
-            # distinct Keys collide mod S (always possible for SIMPLE,
-            # rare otherwise).  Each row probes ALL buckets owned by this
-            # shard, so keep only the first row per qid to avoid double
-            # emits.
-            R = rid.shape[0]
-            eqid = (rid[:, None] == rid[None, :])
-            earlier_r = jnp.arange(R)[:, None] > jnp.arange(R)[None, :]
-            dup_row = jnp.any(eqid & earlier_r, axis=1)
-            rvalid = rvalid & ~dup_row
+            # Two rows of one (query, table) can land on the same shard
+            # when two distinct Keys collide mod S (always possible for
+            # SIMPLE, rare otherwise).  Each row probes ALL buckets its
+            # table owns on this shard, so keep only the first row per
+            # (qid, table) -- sort-based, no R x R matrix.
+            rvalid = first_occurrence_mask(
+                jnp.where(rvalid, rid * T + rtab, IMAX), rvalid)
+            rid_safe = jnp.where(rvalid, rid, 0)
+            rtab_safe = jnp.where(rvalid, rtab, 0)
 
-            # ---- regenerate offsets & select buckets owned by me ----
-            roffs = jax.vmap(offsets_of)(jnp.where(rvalid, rid, 0), rq)
-            rkey, rpacked = jax.vmap(keys_of)(roffs)          # (R, L), (R, L, 2)
+            # ---- regenerate offsets & select buckets owned by me,
+            # under each row's own table params ----
+            R = r.shape[0]
+            rkey = jnp.zeros((R, L), jnp.int32)
+            rpacked = jnp.zeros((R, L, 2), jnp.uint32)
+            for t in range(T):
+                offs_t = jax.vmap(
+                    lambda i, q, t=t: offsets_of(t, i, q))(rid_safe, rq)
+                k_t, p_t = jax.vmap(lambda o, t=t: keys_of(t, o))(offs_t)
+                sel = rtab_safe == t
+                rkey = jnp.where(sel[:, None], k_t, rkey)
+                rpacked = jnp.where(sel[:, None, None], p_t, rpacked)
             mine = (jnp.mod(rkey, S) == me) & rvalid[:, None]  # (R, L)
             # first-occurrence dedupe of H-buckets within the selected set
             eqp = jnp.all(rpacked[:, :, None, :] == rpacked[:, None, :, :], -1)
@@ -552,7 +701,8 @@ class DistributedLSHIndex:
             firstocc = ~jnp.any(eqp & earlier[None], axis=-1)
             probe = mine & firstocc                            # (R, L)
 
-            # ---- bucket search (Fig 3.2 Reduce body), local top-K ----
+            # ---- bucket search (Fig 3.2 Reduce body), local top-K,
+            # stored rows only answer probes of their own table ----
             if use_kernel:
                 from repro.kernels import ops as kops
                 qb = jax.lax.bitcast_convert_type(
@@ -563,7 +713,8 @@ class DistributedLSHIndex:
                     probe.astype(jnp.int32),
                     store_x, jnp.sum(store_x ** 2, -1), pb,
                     store_gid, store_valid.astype(jnp.int32),
-                    float(np.float32((cfg.c * cfg.r) ** 2)), L=L, k=K)
+                    float(np.float32((cfg.c * cfg.r) ** 2)), L=L, k=K,
+                    qtable=rtab_safe, ptable=store_table)
             else:
                 # match[rrow, srow] = stored bucket equals one of my probes
                 match = jnp.any(
@@ -571,6 +722,7 @@ class DistributedLSHIndex:
                     & (rpacked[:, :, None, 1] == store_packed[None, None, :, 1])
                     & probe[:, :, None], axis=1)               # (R, Ns)
                 match = match & store_valid[None, :]
+                match = match & (rtab_safe[:, None] == store_table[None, :])
                 d2 = (jnp.sum(rq ** 2, -1)[:, None]
                       + jnp.sum(store_x ** 2, -1)[None, :]
                       - 2.0 * rq @ store_x.T)                  # (R, Ns)
@@ -583,40 +735,44 @@ class DistributedLSHIndex:
                 row_d, row_g = topk_sort_jnp(d2m, gidm, K, pad_d=INF)
                 row_emit = hit.sum(axis=1).astype(jnp.int32)
 
-            # ---- combine across shards (result return path): each shard
-            # holds at most one live row per qid (dup_row dedupe above),
-            # so its per-qid local top-K is a scatter; the global top-K is
-            # an all_gather + static K-way merge keyed by qid ----
-            qid_safe = jnp.where(rvalid, rid, m)  # scatter sink row m
-            loc_d = jnp.full((m + 1, K), INF).at[qid_safe].set(
+            # ---- local union across tables: this shard holds at most
+            # one live row per (qid, table), so scatter per-row top-Ks
+            # into (qid, table) slots and K-way merge the T tables
+            # (dedup by gid: a point stored in several tables counts
+            # once) ----
+            idx = jnp.where(rvalid, rid * T + rtab, m * T)  # sink m*T
+            loc_d = jnp.full((m * T + 1, K), INF).at[idx].set(
                 jnp.where(rvalid[:, None], row_d, INF))
-            loc_g = jnp.full((m + 1, K), IMAX, jnp.int32).at[qid_safe].set(
+            loc_g = jnp.full((m * T + 1, K), IMAX, jnp.int32).at[idx].set(
                 jnp.where(rvalid[:, None], row_g, IMAX))
-            all_d = jax.lax.all_gather(loc_d, axis)            # (S, m+1, K)
-            all_g = jax.lax.all_gather(loc_g, axis)
-            cand_d = jnp.moveaxis(all_d, 0, 1).reshape(m + 1, S * K)
-            cand_g = jnp.moveaxis(all_g, 0, 1).reshape(m + 1, S * K)
-            # dedup by gid (a point probed via multiple offsets must count
-            # once): sort by (gid, dist), blank repeats, re-sort by
-            # (dist, gid).  Sentinel (INF, IMAX) pairs are fixed points.
-            sg, sd = jax.lax.sort((cand_g, cand_d), dimension=1, num_keys=2)
-            dup = jnp.concatenate(
-                [jnp.zeros((m + 1, 1), bool), sg[:, 1:] == sg[:, :-1]],
-                axis=1)
-            sd = jnp.where(dup, INF, sd)
-            sg = jnp.where(dup, IMAX, sg)
-            gtopd, gtopg = jax.lax.sort((sd, sg), dimension=1, num_keys=2)
-            gtopd, gtopg = gtopd[:, :K], gtopg[:, :K]          # (m+1, K)
-            emit = jnp.zeros((m + 1,), jnp.int32).at[qid_safe].add(
-                jnp.where(rvalid, row_emit, 0))
-            gemit = jax.lax.psum(emit, axis)
-            return (gtopd[:m][None], gtopg[:m][None], gemit[:m][None],
-                    fq_local[None], recv_load[None], drops[None])
+            loc_d, loc_g = merge_topk(
+                loc_d[:m * T].reshape(m, T * K),
+                loc_g[:m * T].reshape(m, T * K), K)         # (m, K)
+            qid_sink = jnp.where(rvalid, rid, m)
+            emit = jnp.zeros((m + 1,), jnp.int32).at[qid_sink].add(
+                jnp.where(rvalid, row_emit, 0))[:m]
+
+            # ---- result return path: ONE routed all_to_all ships each
+            # qid's local top-K (+ emit count) only to the qid's OWNER
+            # shard (qid // m_loc), replacing the old all_gather +
+            # replicated K-way merge + emit psum: O(m*K) received per
+            # shard instead of O(S*m*K) ----
+            ret = jnp.concatenate([
+                _f2i(loc_d), loc_g, emit[:, None]], axis=1)  # (m, 2K+1)
+            recv = _a2a(ret, axis).reshape(S, m_loc, 2 * K + 1)
+            cand_d = jnp.moveaxis(_i2f(recv[:, :, :K]), 0, 1)
+            cand_g = jnp.moveaxis(recv[:, :, K:2 * K], 0, 1)
+            gtopd, gtopg = merge_topk(
+                cand_d.reshape(m_loc, S * K),
+                cand_g.reshape(m_loc, S * K), K)            # (m_loc, K)
+            gemit = recv[:, :, 2 * K].sum(axis=0).astype(jnp.int32)
+            return (gtopd, gtopg, gemit, fq_local, recv_load[None],
+                    drops[None])
 
         spec = P(axis)
         return jax.jit(shard_map(
             query_shard, mesh=self.mesh,
-            in_specs=(spec,) * 6, out_specs=(spec,) * 6,
+            in_specs=(spec,) * 7, out_specs=(spec,) * 6,
             check_vma=False,   # pallas out_shape has no vma annotation
         ), donate_argnums=(0,) if donate else ())
 
@@ -652,16 +808,15 @@ class DistributedLSHIndex:
                 m, st.capacity, Cq, donate, K)
         qids = jnp.arange(m, dtype=jnp.int32)
         gtopd, gtopg, gemit, fq, load, drops = fn(
-            queries, qids, st.x, st.packed, st.gid, st.valid)
-        # every shard computed the same global (m, K) buffers; take shard 0
-        gtopd = np.asarray(gtopd)[0]
-        gtopg = np.asarray(gtopg)[0]
-        gemit = np.asarray(gemit)[0]
+            queries, qids, st.x, st.packed, st.gid, st.table, st.valid)
+        # each shard returned exactly its own qids' results (the routed
+        # return path); the sharded outputs concatenate to (m, K)
+        gtopd = np.asarray(gtopd)
         return QueryResult(
             topk_dist=np.sqrt(np.where(gtopd < np.float32(3e38), gtopd,
                                        np.inf)),
-            topk_gid=gtopg,
-            n_within_cr=gemit,
+            topk_gid=np.asarray(gtopg),
+            n_within_cr=np.asarray(gemit),
             fq=np.asarray(fq).reshape(-1),
             query_load=np.asarray(load),
             drops=int(np.asarray(drops).sum()))

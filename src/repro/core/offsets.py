@@ -11,6 +11,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.hashing import table_key
+
 
 def offset_directions(key: jax.Array, L: int, d: int) -> jax.Array:
     """(L, d) unit vectors, uniform on the sphere."""
@@ -40,3 +42,16 @@ def batch_query_offsets(base_key: jax.Array, qids: jax.Array, qs: jax.Array,
                         L: int, r: float) -> jax.Array:
     """(m, L, d) offsets for a batch of queries (m, d)."""
     return jax.vmap(lambda i, q: query_offsets(base_key, i, q, L, r))(qids, qs)
+
+
+def table_base_key(base_key: jax.Array, table: int) -> jax.Array:
+    """Offset RNG base key for one table of a fused multi-table index.
+
+    Table 0 keeps ``base_key`` unchanged (a T-table index regenerates the
+    single-table offsets bit-for-bit for its first table); table t folds
+    the table id in BEFORE the per-query fold, so every shard can still
+    regenerate any (table, qid) offset set from the shared key alone.
+    Same derivation as ``hashing.table_key`` -- one definition, two
+    entry points, so the nested-prefix invariant cannot diverge.
+    """
+    return table_key(base_key, table)

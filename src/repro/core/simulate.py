@@ -5,11 +5,17 @@ This computes the same quantities the distributed `index.py` path produces
 (cross-checked in tests at small shard counts), but vectorised over the
 whole dataset, so benchmarks can reproduce the paper's 1024-reducer Table 1
 and the Fig 4.1 shuffle-size curves quickly on one host.
+
+Multi-table (``cfg.n_tables`` = T > 1) accounting mirrors the fused index:
+each table hashes with its own split-key parameters, rows/loads sum over
+tables (with a per-table breakdown in the report), and recall is computed
+on the UNION candidate set -- a point is a candidate iff ANY table
+co-buckets it with any probed offset of that table.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -18,8 +24,8 @@ import numpy as np
 from repro.core import accounting
 from repro.core.config import LSHConfig, Scheme
 from repro.core.hashing import (HashParams, hash_h, pack_buckets,
-                                sample_params, shard_key, shard_of)
-from repro.core.offsets import batch_query_offsets
+                                sample_table_params, shard_key, shard_of)
+from repro.core.offsets import batch_query_offsets, table_base_key
 
 
 def _dedupe_mask_2d(vals: jax.Array) -> jax.Array:
@@ -43,21 +49,27 @@ def _dedupe_mask_packed(packed: jax.Array) -> jax.Array:
 @dataclasses.dataclass
 class SimState:
     cfg: LSHConfig
-    params: HashParams
-    base_key: jax.Array
+    params: HashParams                 # table 0 (single-table compat view)
+    base_key: jax.Array                # table 0 offset key
+    table_params: List[HashParams]     # one per fused table
+    table_keys: List[jax.Array]        # per-table offset base keys
 
 
 def make_sim(cfg: LSHConfig) -> SimState:
     key = jax.random.PRNGKey(cfg.seed)
     kp, kq = jax.random.split(key)
-    return SimState(cfg, sample_params(kp, cfg), kq)
+    tparams = sample_table_params(kp, cfg)
+    tkeys = [table_base_key(kq, t) for t in range(cfg.n_tables)]
+    return SimState(cfg, tparams[0], kq, tparams, tkeys)
 
 
-def _probe_hashes(sim: SimState, queries: jax.Array,
-                  qids: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """First-layer bucket vectors of every probe: (m, L', k) int32 plus a
-    (m, L') validity mask (False on mplsh sentinel padding rows)."""
-    cfg, params, base_key = sim.cfg, sim.params, sim.base_key
+def _probe_hashes(sim: SimState, queries: jax.Array, qids: jax.Array,
+                  table: int = 0) -> tuple[jax.Array, jax.Array]:
+    """First-layer bucket vectors of every probe of one table: (m, L', k)
+    int32 plus a (m, L') validity mask (False on mplsh sentinel rows)."""
+    cfg = sim.cfg
+    params = sim.table_params[table]
+    base_key = sim.table_keys[table]
     if cfg.probes == "mplsh":
         from repro.core.multiprobe import batch_mplsh_probes, probe_valid_mask
         hk_off = batch_mplsh_probes(params, cfg, queries, cfg.L)
@@ -80,62 +92,73 @@ def simulate(cfg: LSHConfig, data: jax.Array, queries: jax.Array,
       queries: (m, d) float32 query points.
       compute_recall: if True, run the exact (chunked) candidate search and
         report the paper's recall metric (>=1 point within r returned).
+        With n_tables > 1 the candidate set is the union over tables.
       k_neighbors: additionally report recall@K (fraction of the exact
         brute-force top-K retrieved by the LSH candidate top-K within cr)
         -- requires compute_recall=True.
     """
     sim = make_sim(cfg)
-    params = sim.params
     n, d = data.shape
     m = queries.shape[0]
-    S = cfg.n_shards
-
-    # ---------------- index build: one row per data point ----------------
-    hk_data = hash_h(params, data, cfg.W)              # (n, k)
-    data_shard = shard_of(params, cfg, hk_data)        # (n,)
-    data_load = np.bincount(np.asarray(data_shard), minlength=S)
-
-    # ---------------- query routing ----------------
+    S, T = cfg.n_shards, cfg.n_tables
     qids = jnp.arange(m, dtype=jnp.int32)
-    hk_off, pvalid = _probe_hashes(sim, queries, qids)  # (m, L', k)
-    keys_off = shard_key(params, cfg, hk_off)          # (m, L) int32
-    if cfg.scheme == Scheme.SIMPLE:
-        # one pair per distinct H-bucket (the Key is the bucket id)
-        packed_off = pack_buckets(params, hk_off)      # (m, L, 2)
-        live = _dedupe_mask_packed(packed_off) & pvalid
-    else:
-        # one pair per distinct GH value
-        live = _dedupe_mask_2d(keys_off) & pvalid
-    dest = jnp.mod(keys_off, S).astype(jnp.int32)      # (m, L)
 
-    fq = live.sum(axis=1)                              # (m,)
-    live_np = np.asarray(live)
-    dest_np = np.asarray(dest)
-    query_load = np.bincount(dest_np[live_np], minlength=S)
+    data_load = np.zeros((S,), np.int64)
+    query_load = np.zeros((S,), np.int64)
+    fq = np.zeros((m,), np.int64)
+    q_rows_t, d_rows_t = [], []
+    probes_t: list = []          # per-table (hk_off, pvalid) for recall
 
-    query_rows = int(np.asarray(fq).sum())
-    fq_mean = float(np.asarray(fq).mean())
-    fq_max = int(np.asarray(fq).max())
+    for t in range(T):
+        params = sim.table_params[t]
+        # ------------- index build: one row per point per table --------
+        hk_data = hash_h(params, data, cfg.W)          # (n, k)
+        data_shard = shard_of(params, cfg, hk_data)    # (n,)
+        data_load += np.bincount(np.asarray(data_shard), minlength=S)
+        d_rows_t.append(n)
 
+        # ------------- query routing -----------------------------------
+        hk_off, pvalid = _probe_hashes(sim, queries, qids, table=t)
+        probes_t.append((hk_off, pvalid))
+        keys_off = shard_key(params, cfg, hk_off)      # (m, L) int32
+        if cfg.scheme == Scheme.SIMPLE:
+            # one pair per distinct H-bucket (the Key is the bucket id)
+            packed_off = pack_buckets(params, hk_off)  # (m, L, 2)
+            live = _dedupe_mask_packed(packed_off) & pvalid
+        else:
+            # one pair per distinct GH value
+            live = _dedupe_mask_2d(keys_off) & pvalid
+        dest = jnp.mod(keys_off, S).astype(jnp.int32)  # (m, L)
+
+        live_np = np.asarray(live)
+        dest_np = np.asarray(dest)
+        query_load += np.bincount(dest_np[live_np], minlength=S)
+        fq += np.asarray(live.sum(axis=1))
+        q_rows_t.append(int(live_np.sum()))
+
+    query_rows = int(sum(q_rows_t))
     report = accounting.TrafficReport(
         scheme=cfg.scheme.value,
         n_shards=S,
         query_rows=query_rows,
-        query_bytes=query_rows * accounting.query_row_bytes(d),
-        fq_mean=fq_mean,
-        fq_max=fq_max,
+        query_bytes=query_rows * accounting.query_row_bytes(d, T),
+        fq_mean=float(fq.mean()),
+        fq_max=int(fq.max()),
         fq_bound=cfg.fq_bound(),
-        data_rows=n,
-        data_bytes=n * accounting.data_row_bytes(d),
+        data_rows=n * T,
+        data_bytes=n * T * accounting.data_row_bytes(d, T),
         data_load_avg=float(data_load.mean()),
         data_load_max=int(data_load.max()),
         query_load_avg=float(query_load.mean()),
         query_load_max=int(query_load.max()),
+        n_tables=T,
+        query_rows_by_table=tuple(q_rows_t),
+        data_rows_by_table=tuple(d_rows_t),
     )
 
     if compute_recall:
         rec, emitted, _, lsh_idx = _exact_search_recall(
-            cfg, params, data, queries, hk_off, pvalid, data_chunk,
+            cfg, sim.table_params, data, queries, probes_t, data_chunk,
             k=k_neighbors)
         report.recall = rec
         report.results_emitted = emitted
@@ -163,17 +186,19 @@ def lsh_topk_reference(cfg: LSHConfig, data: jax.Array, queries: jax.Array,
                        ) -> tuple[np.ndarray, np.ndarray]:
     """Single-machine LSH top-K ground truth: for each query, the exact K
     best (dist, gid) pairs among its LSH candidate set (points whose
-    H-bucket matches a probed bucket) within distance cr, in the same
-    (dist, gid) lex order as the distributed path -- what the sharded
-    index must reproduce regardless of placement scheme.
+    H-bucket matches a probed bucket in ANY of the n_tables tables)
+    within distance cr, in the same (dist, gid) lex order as the
+    distributed path -- what the sharded fused index must reproduce
+    regardless of placement scheme or table count.
 
     Returns (m, k) sqrt-distances (inf pad) and gids (IMAX pad).
     """
     sim = make_sim(cfg)
     qids = jnp.arange(queries.shape[0], dtype=jnp.int32)
-    hk_off, pvalid = _probe_hashes(sim, queries, qids)
+    probes_t = [_probe_hashes(sim, queries, qids, table=t)
+                for t in range(cfg.n_tables)]
     _, _, topd, topg = _exact_search_recall(
-        cfg, sim.params, data, queries, hk_off, pvalid, data_chunk, k=k)
+        cfg, sim.table_params, data, queries, probes_t, data_chunk, k=k)
     return topd, topg
 
 
@@ -184,7 +209,8 @@ class StreamReport:
     The paper's two figures of merit (shuffle size, max reducer load)
     measured in the serving regime: the index grows online while query
     buckets flush against the current store, so load balance and traffic
-    are trajectories, not single numbers.
+    are trajectories, not single numbers.  Rows sum over the fused
+    tables.
     """
     scheme: str
     n_shards: int
@@ -199,6 +225,7 @@ class StreamReport:
     data_skew: np.ndarray              # (steps,) store skew after insert
     query_skew: np.ndarray             # (steps,) query-shard skew per step
     data_load_final: np.ndarray        # (S,) live rows at end of stream
+    n_tables: int = 1
 
     @property
     def data_skew_final(self) -> float:
@@ -207,6 +234,7 @@ class StreamReport:
 
     def summary(self) -> str:
         return (f"scheme={self.scheme} shards={self.n_shards} "
+                f"tables={self.n_tables} "
                 f"steps={self.steps} inserted={self.total_inserted} "
                 f"queries={self.total_queries} "
                 f"rows/query={self.fq_mean:.2f} "
@@ -224,44 +252,57 @@ def simulate_stream(cfg: LSHConfig, data: jax.Array, queries: jax.Array,
 
     Query ids restart per bucket -- exactly what the serving front-end's
     pad-to-bucket flush does -- so per-step traffic matches the service.
+    Inserted-row counts are POINTS (the fused index stores n_tables rows
+    per point; loads below count rows, matching ``shard_load``).
     """
     sim = make_sim(cfg)
-    params, base_key = sim.params, sim.base_key
     n = data.shape[0]
     m_all = queries.shape[0]
-    S = cfg.n_shards
+    S, T = cfg.n_shards, cfg.n_tables
 
-    hk_data = hash_h(params, data, cfg.W)
-    data_shard = np.asarray(shard_of(params, cfg, hk_data))   # (n,)
-    load = np.bincount(data_shard[:n_prefix], minlength=S).astype(np.int64)
+    data_shard_t = []                  # (T,) arrays of (n,) shard ids
+    for t in range(T):
+        hk_data = hash_h(sim.table_params[t], data, cfg.W)
+        data_shard_t.append(np.asarray(shard_of(sim.table_params[t], cfg,
+                                                hk_data)))
+    load = np.zeros((S,), np.int64)
+    for t in range(T):
+        load += np.bincount(data_shard_t[t][:n_prefix], minlength=S)
 
     qids = jnp.arange(query_batch, dtype=jnp.int32)
     steps = max(1, (n - n_prefix) // max(insert_batch, 1))
     q_rows, i_rows, d_skew, q_skew = [], [], [], []
     total_q = 0
     fq_sum = 0.0
-    for t in range(steps):
-        lo = n_prefix + t * insert_batch
+    for step in range(steps):
+        lo = n_prefix + step * insert_batch
         hi = min(n, lo + insert_batch)
-        load += np.bincount(data_shard[lo:hi], minlength=S)
+        for t in range(T):
+            load += np.bincount(data_shard_t[t][lo:hi], minlength=S)
         i_rows.append(hi - lo)
         d_skew.append(load.max() / max(load.mean(), 1.0))
 
-        sel = (np.arange(query_batch) + t * query_batch) % m_all
+        sel = (np.arange(query_batch) + step * query_batch) % m_all
         q = queries[jnp.asarray(sel)]
-        offs = batch_query_offsets(base_key, qids, q, cfg.L, cfg.r)
-        hk_off = hash_h(params, offs, cfg.W)
-        keys_off = shard_key(params, cfg, hk_off)
-        if cfg.scheme == Scheme.SIMPLE:
-            live = _dedupe_mask_packed(pack_buckets(params, hk_off))
-        else:
-            live = _dedupe_mask_2d(keys_off)
-        live_np = np.asarray(live)
-        dest_np = np.asarray(jnp.mod(keys_off, S).astype(jnp.int32))
-        qload = np.bincount(dest_np[live_np], minlength=S)
-        q_rows.append(int(live_np.sum()))
+        step_rows = 0
+        qload = np.zeros((S,), np.int64)
+        for t in range(T):
+            params = sim.table_params[t]
+            offs = batch_query_offsets(sim.table_keys[t], qids, q,
+                                       cfg.L, cfg.r)
+            hk_off = hash_h(params, offs, cfg.W)
+            keys_off = shard_key(params, cfg, hk_off)
+            if cfg.scheme == Scheme.SIMPLE:
+                live = _dedupe_mask_packed(pack_buckets(params, hk_off))
+            else:
+                live = _dedupe_mask_2d(keys_off)
+            live_np = np.asarray(live)
+            dest_np = np.asarray(jnp.mod(keys_off, S).astype(jnp.int32))
+            qload += np.bincount(dest_np[live_np], minlength=S)
+            step_rows += int(live_np.sum())
+        q_rows.append(step_rows)
         q_skew.append(qload.max() / max(qload.mean(), 1.0))
-        fq_sum += float(live_np.sum())
+        fq_sum += float(step_rows)
         total_q += query_batch
 
     return StreamReport(
@@ -271,47 +312,60 @@ def simulate_stream(cfg: LSHConfig, data: jax.Array, queries: jax.Array,
         insert_rows_per_step=np.asarray(i_rows),
         fq_mean=fq_sum / max(total_q, 1),
         data_skew=np.asarray(d_skew), query_skew=np.asarray(q_skew),
-        data_load_final=load)
+        data_load_final=load, n_tables=T)
 
 
-def _exact_search_recall(cfg: LSHConfig, params: HashParams,
+def _exact_search_recall(cfg: LSHConfig, table_params: List[HashParams],
                          data: jax.Array, queries: jax.Array,
-                         hk_off: jax.Array, pvalid: jax.Array,
-                         data_chunk: int, k: Optional[int] = None
+                         probes_t: list, data_chunk: int,
+                         k: Optional[int] = None
                          ) -> tuple[float, int,
                                     Optional[np.ndarray],
                                     Optional[np.ndarray]]:
     """Chunked exact candidate search (single pass over the data).
 
-    A data point p is a candidate for query q iff H(p) equals H(q+delta_i)
-    for some live offset i (note: placement scheme does NOT change the
-    candidate set -- GH is a function of H, so bucket-mates are always
-    co-located with the routed query row).  Returns
+    A data point p is a candidate for query q iff H_t(p) equals
+    H_t(q+delta^t_i) for some table t and live offset i of that table
+    (note: placement scheme does NOT change the candidate set -- GH is a
+    function of H, so bucket-mates are always co-located with the routed
+    query row).  ``probes_t`` is a list of per-table (hk_off, pvalid)
+    pairs as produced by ``_probe_hashes``.  Returns
       (recall, emitted, topk_dist, topk_gid):
     recall = fraction of queries for which a returned candidate lies
-    within distance r; emitted = total candidates within cr; with k set,
-    also the per-query exact top-K among candidates within cr, as (m, k)
+    within distance r; emitted = total (candidate, table) hits within cr
+    -- a point co-bucketed in several tables counts once per table,
+    matching the distributed path's n_within_cr; with k set, also the
+    per-query exact top-K among candidates within cr, as (m, k)
     sqrt-distances / gids in (dist, gid) lex order (else None, None).
     """
     from repro.core.ref_search import topk_merge_host, topk_sort_jnp
-    m, L, _ = hk_off.shape
-    packed_off = pack_buckets(params, hk_off)          # (m, L, 2)
+    T = len(probes_t)
+    m = probes_t[0][0].shape[0]
+    packed_off_t = [pack_buckets(table_params[t], probes_t[t][0])
+                    for t in range(T)]                 # (m, L, 2) each
     r2 = jnp.float32(cfg.r ** 2)
     cr2 = jnp.float32((cfg.c * cfg.r) ** 2)
     q_sq = jnp.sum(queries ** 2, axis=-1)              # (m,)
     imax = np.iinfo(np.int32).max
 
-    def chunk_stats(chunk: jax.Array, packed_chunk: jax.Array, idx0):
-        # (m, B) candidate mask
-        eq = jnp.all(packed_off[:, :, None, :] == packed_chunk[None, None],
-                     axis=-1)                          # (m, L, B)
-        cand = jnp.any(eq & pvalid[:, :, None], axis=1)  # (m, B)
+    def chunk_stats(chunk: jax.Array, packed_chunk_t: tuple, idx0):
+        # (m, B) candidate mask per table; emit counts sum over tables
+        cand_any = jnp.zeros((m, chunk.shape[0]), bool)
+        n_hit_tables = jnp.zeros((m, chunk.shape[0]), jnp.int32)
+        for t in range(T):
+            eq = jnp.all(
+                packed_off_t[t][:, :, None, :] == packed_chunk_t[t][None, None],
+                axis=-1)                               # (m, L, B)
+            cand_t = jnp.any(eq & probes_t[t][1][:, :, None], axis=1)
+            cand_any = cand_any | cand_t
+            n_hit_tables = n_hit_tables + cand_t.astype(jnp.int32)
         d2 = (q_sq[:, None] + jnp.sum(chunk ** 2, axis=-1)[None, :]
               - 2.0 * queries @ chunk.T)
         d2 = jnp.maximum(d2, 0.0)
-        hit = cand & (d2 <= cr2)
-        hit_r = jnp.any(cand & (d2 <= r2), axis=1)     # (m,)
-        emit = jnp.sum(hit)
+        within = d2 <= cr2
+        hit = cand_any & within
+        hit_r = jnp.any(cand_any & (d2 <= r2), axis=1)  # (m,)
+        emit = jnp.sum(jnp.where(within, n_hit_tables, 0))
         if not k:
             return hit_r, emit, (), ()
         cd = jnp.where(hit, d2, jnp.inf)
@@ -326,11 +380,13 @@ def _exact_search_recall(cfg: LSHConfig, params: HashParams,
     best = np.full((m, k), np.inf, np.float32) if k else None
     arg = np.full((m, k), imax, np.int32) if k else None
     n = data.shape[0]
-    packed_data = pack_buckets(params, hash_h(params, data, cfg.W))
+    packed_data_t = tuple(
+        pack_buckets(table_params[t], hash_h(table_params[t], data, cfg.W))
+        for t in range(T))
     for s in range(0, n, data_chunk):
         e = min(n, s + data_chunk)
-        h, em, cd, cg = chunk_stats(data[s:e], packed_data[s:e],
-                                    np.int32(s))
+        h, em, cd, cg = chunk_stats(
+            data[s:e], tuple(p[s:e] for p in packed_data_t), np.int32(s))
         hits |= np.asarray(h)
         emitted += int(em)
         if k:

@@ -33,9 +33,9 @@ F32_MAX = float(jnp.finfo(jnp.float32).max)
 IMAX = int(jnp.iinfo(jnp.int32).max)
 
 
-def _bucket_search_kernel(q_ref, qsq_ref, qb_ref, probe_ref,
+def _bucket_search_kernel(q_ref, qsq_ref, qb_ref, probe_ref, qtab_ref,
                           p_ref, psq_ref, pb_ref, gid_ref, pvalid_ref,
-                          cr2_ref,
+                          ptab_ref, cr2_ref,
                           topd_ref, topg_ref, cnt_ref, *, L: int, K: int):
     j = pl.program_id(1)
 
@@ -57,6 +57,10 @@ def _bucket_search_kernel(q_ref, qsq_ref, qb_ref, probe_ref,
               & (qb[:, 2 * l + 1, None] == pb[None, :, 1]))
         match = match | (eq & (probe[:, l, None] > 0))
     match = match & (pvalid_ref[...].reshape(1, -1) > 0)
+    # multi-table fusion: a stored row only answers probes of its own
+    # table (rows of different tables live interleaved in one store)
+    match = match & (qtab_ref[...].reshape(-1, 1)
+                     == ptab_ref[...].reshape(1, -1))
 
     hit = match & (d2 <= cr2_ref[0, 0])
     d2m = jnp.where(hit, d2, F32_MAX)             # (TR, TN)
@@ -105,11 +109,13 @@ def vmem_bytes_per_step(d: int, L: int, K: int) -> int:
                 + TILE_R * 4            # qsq
                 + TILE_R * 2 * L * 4    # qbuckets
                 + TILE_R * L * 4        # probe
+                + TILE_R * 4            # qtable
                 + TILE_N * d * 4        # p tile
                 + TILE_N * 4            # psq
                 + TILE_N * 2 * 4        # pbuckets
                 + TILE_N * 4            # gid
                 + TILE_N * 4            # pvalid
+                + TILE_N * 4            # ptable
                 + 4)                    # cr2 scalar
     out_bytes = TILE_R * K * 4 * 2 + TILE_R * 4   # topd, topg, cnt
     dist_tile = TILE_R * TILE_N * 4               # d2 scratch residency
@@ -117,8 +123,8 @@ def vmem_bytes_per_step(d: int, L: int, K: int) -> int:
 
 
 @functools.partial(jax.jit, static_argnames=("L", "K", "interpret"))
-def bucket_search_pallas(q, qsq, qbuckets, probe, p, psq, pbuckets, gid,
-                         pvalid, cr2, *, L: int, K: int = 1,
+def bucket_search_pallas(q, qsq, qbuckets, probe, qtable, p, psq, pbuckets,
+                         gid, pvalid, ptable, cr2, *, L: int, K: int = 1,
                          interpret: bool = False):
     """Streaming masked top-K NN scan.
 
@@ -126,9 +132,11 @@ def bucket_search_pallas(q, qsq, qbuckets, probe, p, psq, pbuckets, gid,
       q: (R, d) query rows;          qsq: (R,) squared norms.
       qbuckets: (R, 2*L) int32 -- packed (hi, lo) per probed offset bucket.
       probe: (R, L) int32 -- 1 where this offset bucket should be searched.
+      qtable: (R,) int32 table id each query row probes (0 for T=1).
       p: (N, d) stored points;       psq: (N,) squared norms.
       pbuckets: (N, 2) int32 packed bucket per stored point.
       gid: (N,) int32 global ids;    pvalid: (N,) int32 0/1.
+      ptable: (N,) int32 table id each stored row belongs to.
       cr2: scalar threshold (c*r)^2.
       K: neighbours to keep per row (static).
     Returns:
@@ -136,7 +144,8 @@ def bucket_search_pallas(q, qsq, qbuckets, probe, p, psq, pbuckets, gid,
       topg (R, K) int32 gids (IMAX sentinel pad),
       count (R,) int32 hits within cr.
     Rows are sorted by (distance^2, gid) lex order, so K=1 reproduces the
-    old single-best contract exactly.
+    old single-best contract exactly; a stored row only matches probes of
+    its own table.
     """
     R, d = q.shape
     N = p.shape[0]
@@ -152,9 +161,11 @@ def bucket_search_pallas(q, qsq, qbuckets, probe, p, psq, pbuckets, gid,
             pl.BlockSpec((TILE_R,), lambda i, j: (i,)),
             pl.BlockSpec((TILE_R, 2 * L), lambda i, j: (i, 0)),
             pl.BlockSpec((TILE_R, L), lambda i, j: (i, 0)),
+            pl.BlockSpec((TILE_R,), lambda i, j: (i,)),
             pl.BlockSpec((TILE_N, d), lambda i, j: (j, 0)),
             pl.BlockSpec((TILE_N,), lambda i, j: (j,)),
             pl.BlockSpec((TILE_N, 2), lambda i, j: (j, 0)),
+            pl.BlockSpec((TILE_N,), lambda i, j: (j,)),
             pl.BlockSpec((TILE_N,), lambda i, j: (j,)),
             pl.BlockSpec((TILE_N,), lambda i, j: (j,)),
             pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
@@ -170,5 +181,5 @@ def bucket_search_pallas(q, qsq, qbuckets, probe, p, psq, pbuckets, gid,
             jax.ShapeDtypeStruct((R,), jnp.int32),
         ],
         interpret=interpret,
-    )(q, qsq, qbuckets, probe, p, psq, pbuckets, gid, pvalid,
-      jnp.full((1, 1), cr2, jnp.float32))
+    )(q, qsq, qbuckets, probe, qtable, p, psq, pbuckets, gid, pvalid,
+      ptable, jnp.full((1, 1), cr2, jnp.float32))

@@ -50,28 +50,38 @@ def lsh_hash(x: jax.Array, a: jax.Array, b: jax.Array, *, w: float,
 
 
 def bucket_search(q, qsq, qbuckets, probe, p, psq, pbuckets, gid, pvalid,
-                  cr2, *, L: int, k: int = 1, use_kernel: bool = True):
+                  cr2, *, L: int, k: int = 1, use_kernel: bool = True,
+                  qtable=None, ptable=None):
     """Streaming masked top-K NN scan; see bucket_search_pallas.
 
     Returns (topd (R, k), topg (R, k), cnt (R,)) in (dist^2, gid) lex
     order, sentinel-padded with (F32_MAX, IMAX) past the available hits.
+    qtable (R,) / ptable (N,) restrict matches to same-table rows for a
+    fused multi-table store (None = single table 0).
     """
     if not use_kernel:
         return ref.bucket_search_ref(q, qsq, qbuckets, probe, p, psq,
-                                     pbuckets, gid, pvalid, cr2, L=L, K=k)
+                                     pbuckets, gid, pvalid, cr2, L=L, K=k,
+                                     qtable=qtable, ptable=ptable)
     R, N = q.shape[0], p.shape[0]
+    if qtable is None:
+        qtable = jnp.zeros((R,), jnp.int32)
+    if ptable is None:
+        ptable = jnp.zeros((N,), jnp.int32)
     qp = _pad_to(q, 0, TILE_R)
     qsqp = _pad_to(qsq, 0, TILE_R)
     qbp = _pad_to(qbuckets, 0, TILE_R)
     prp = _pad_to(probe, 0, TILE_R)          # padded rows probe nothing
+    qtp = _pad_to(qtable, 0, TILE_R)
     pp = _pad_to(p, 0, TILE_N)
     psqp = _pad_to(psq, 0, TILE_N)
     pbp = _pad_to(pbuckets, 0, TILE_N)
     gidp = _pad_to(gid, 0, TILE_N, value=jnp.iinfo(jnp.int32).max)
     pvp = _pad_to(pvalid, 0, TILE_N)         # padded points invalid
+    ptp = _pad_to(ptable, 0, TILE_N)
     topd, topg, cnt = bucket_search_pallas(
-        qp, qsqp, qbp, prp, pp, psqp, pbp, gidp, pvp, cr2, L=L, K=k,
-        interpret=_on_cpu())
+        qp, qsqp, qbp, prp, qtp, pp, psqp, pbp, gidp, pvp, ptp, cr2,
+        L=L, K=k, interpret=_on_cpu())
     return topd[:R], topg[:R], cnt[:R]
 
 

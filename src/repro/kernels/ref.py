@@ -23,12 +23,15 @@ def lsh_hash_ref(x: jax.Array, a: jax.Array, b: jax.Array, *,
 
 
 def bucket_search_ref(q, qsq, qbuckets, probe, p, psq, pbuckets, gid,
-                      pvalid, cr2, *, L: int, K: int = 1):
+                      pvalid, cr2, *, L: int, K: int = 1,
+                      qtable=None, ptable=None):
     """Masked top-K NN scan; see bucket_search_pallas for the contract.
 
     Returns (topd (R, K), topg (R, K), cnt (R,)): per-row K best
     (dist^2, gid) pairs in (dist^2, gid) lex order, sentinel-padded with
-    (F32_MAX, IMAX) when fewer than K points hit.
+    (F32_MAX, IMAX) when fewer than K points hit.  With qtable/ptable set
+    (multi-table fusion), a stored row only matches probes of its own
+    table; None means everything is table 0.
     """
     d2 = qsq[:, None] + psq[None, :] - 2.0 * q @ p.T
     d2 = jnp.maximum(d2, 0.0)
@@ -38,6 +41,10 @@ def bucket_search_ref(q, qsq, qbuckets, probe, p, psq, pbuckets, gid,
         & (qb[:, :, 1, None] == pbuckets[None, None, :, 1])
         & (probe[:, :, None] > 0), axis=1)
     match = match & (pvalid[None, :] > 0)
+    if qtable is not None or ptable is not None:
+        qt = jnp.zeros(q.shape[:1], jnp.int32) if qtable is None else qtable
+        pt = jnp.zeros(p.shape[:1], jnp.int32) if ptable is None else ptable
+        match = match & (qt[:, None] == pt[None, :])
     hit = match & (d2 <= cr2)
     d2m = jnp.where(hit, d2, F32_MAX)
     gidm = jnp.where(hit, jnp.broadcast_to(gid[None, :], d2m.shape), IMAX)

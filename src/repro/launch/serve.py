@@ -31,6 +31,9 @@ def main(argv=None):
     ap.add_argument("--scheme", default="layered",
                     choices=[s.value for s in Scheme])
     ap.add_argument("--L", type=int, default=16)
+    ap.add_argument("--tables", type=int, default=1,
+                    help="fused hash tables (recall lever; same number of"
+                         " collectives per step for any value)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -44,7 +47,7 @@ def main(argv=None):
     t0 = time.monotonic()
     svc = RetrievalService.build(
         cfg, params, doc_tokens, mesh, r=0.2, L=args.L, k=8, W=0.5,
-        scheme=Scheme(args.scheme), seed=args.seed)
+        scheme=Scheme(args.scheme), seed=args.seed, n_tables=args.tables)
     br = svc.index.build_result
     print(f"[serve] built index: {args.docs} docs, "
           f"{time.monotonic() - t0:.1f}s, "

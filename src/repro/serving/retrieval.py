@@ -53,11 +53,14 @@ class RetrievalService:
               W: float = 1.0, scheme: Scheme = Scheme.LAYERED,
               seed: int = 0, use_kernel: bool = False,
               bucket_size: int = 64, max_latency_ms: float = 25.0,
-              k_neighbors: int = 1):
+              k_neighbors: int = 1, n_tables: int = 1):
+        """n_tables > 1 fuses that many independent hash tables into the
+        one routed index (the classic recall lever) at NO extra
+        collectives per query -- only extra rows inside the same ones."""
         docs = embed_texts(params, cfg, doc_tokens)
         lsh = LSHConfig(d=int(docs.shape[1]), k=k, W=W, r=r, c=c, L=L,
                         n_shards=mesh.shape["shard"], scheme=scheme,
-                        seed=seed)
+                        seed=seed, n_tables=n_tables)
         index = DistributedLSHIndex(lsh, mesh, use_kernel=use_kernel,
                                     k_neighbors=k_neighbors)
         index.build(docs)
@@ -69,6 +72,8 @@ class RetrievalService:
 
     def insert_docs(self, doc_tokens) -> "np.ndarray":
         """Embed and stream new documents into the index; returns gids."""
+        if doc_tokens.shape[0] == 0:
+            return np.empty((0,), np.int64)
         docs = embed_texts(self.params, self.cfg, doc_tokens)
         res = self.service.insert(docs)
         if res.drops:

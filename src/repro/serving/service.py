@@ -59,13 +59,23 @@ class ServiceStats:
     flush_deadline: int = 0       # flushes triggered by the latency SLO
     flush_manual: int = 0         # explicit flush()/drain()/result()
     pad_rows: int = 0             # padding rows shipped (bucket - live)
-    inserts: int = 0              # rows inserted
+    inserts: int = 0              # points inserted
+    insert_rows: int = 0          # routed rows stored (points x n_tables)
     insert_batches: int = 0
-    deletes: int = 0              # rows tombstoned
+    deletes: int = 0              # rows tombstoned (points x n_tables)
     drops: int = 0                # capacity overflow anywhere (must stay 0)
-    routed_rows: int = 0          # live query rows shipped (network cost)
+    routed_rows: int = 0          # live query rows shipped (network cost,
+    #                               summed over the fused tables)
     query_time_s: float = 0.0     # wall time inside flushed query steps
     insert_time_s: float = 0.0
+
+    @property
+    def collectives_issued(self) -> int:
+        """Cross-shard collectives the fused index issued for this stream:
+        2 per query flush (dispatch + routed return) and 1 per insert
+        batch, INDEPENDENT of n_tables (a naive T-table deployment pays
+        T x this)."""
+        return 2 * self.batches + self.insert_batches
 
     @property
     def occupancy(self) -> float:
@@ -90,6 +100,7 @@ class ServiceStats:
                 f"inserts={self.inserts} ips={self.inserts_per_s:.0f} "
                 f"rows/query="
                 f"{self.routed_rows / max(self.queries, 1):.2f} "
+                f"collectives={self.collectives_issued} "
                 f"drops={self.drops}")
 
 
@@ -223,6 +234,7 @@ class ShardedLSHService:
         res = self.index.insert(points, gids=gids)
         self.stats.insert_time_s += time.monotonic() - t0
         self.stats.inserts += res.n_inserted
+        self.stats.insert_rows += res.rows_stored
         self.stats.insert_batches += 1
         self.stats.drops += res.drops
         return res

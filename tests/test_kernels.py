@@ -123,6 +123,40 @@ def test_bucket_search_topk_ties():
     assert np.all(np.asarray(cnt) == N)
 
 
+@pytest.mark.parametrize("T", [2, 4])
+def test_bucket_search_table_mask(T):
+    """Multi-table fusion: a stored row only matches probes of its own
+    table.  Kernel == ref with table ids, and the T-table masked result
+    equals running each table's rows separately."""
+    R, N, d, L = 128, 256, 32, 4
+    key = jax.random.PRNGKey(41 + T)
+    args = _bucket_case(key, R, N, d, L, frac_match=0.6)
+    ks = jax.random.split(jax.random.PRNGKey(99), 2)
+    qtable = jax.random.randint(ks[0], (R,), 0, T, dtype=jnp.int32)
+    ptable = jax.random.randint(ks[1], (N,), 0, T, dtype=jnp.int32)
+    cr2 = 40.0
+    td_k, tg_k, c_k = ops.bucket_search(*args, cr2, L=L, k=4,
+                                        qtable=qtable, ptable=ptable)
+    td_r, tg_r, c_r = ref.bucket_search_ref(*args, cr2, L=L, K=4,
+                                            qtable=qtable, ptable=ptable)
+    np.testing.assert_allclose(np.asarray(td_k), np.asarray(td_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(tg_k), np.asarray(tg_r))
+    np.testing.assert_array_equal(np.asarray(c_k), np.asarray(c_r))
+    # per-table oracle: zero out the OTHER tables' stored rows via pvalid
+    q, qsq, qb, probe, p, psq, pb, gid, pvalid = args
+    for t in range(T):
+        pv_t = pvalid * (np.asarray(ptable) == t)
+        td_t, tg_t, c_t = ref.bucket_search_ref(
+            q, qsq, qb, probe, p, psq, pb, gid, jnp.asarray(pv_t), cr2,
+            L=L, K=4)
+        rows = np.asarray(qtable) == t
+        np.testing.assert_array_equal(np.asarray(tg_k)[rows],
+                                      np.asarray(tg_t)[rows])
+        np.testing.assert_array_equal(np.asarray(c_k)[rows],
+                                      np.asarray(c_t)[rows])
+
+
 def test_bucket_search_no_matches():
     R, N, d, L = 128, 128, 8, 2
     args = list(_bucket_case(jax.random.PRNGKey(0), R, N, d, L))
