@@ -114,7 +114,7 @@ for scheme in (Scheme.SIMPLE, Scheme.LAYERED):
 
 
 _TABLES_SCRIPT = """
-import time
+import json, time
 import jax, numpy as np
 import jax.numpy as jnp
 from repro.compat import make_mesh
@@ -129,14 +129,25 @@ data, queries, _ = planted_random(n=N, m=M, d=D, r=0.3, seed=0)
 data, queries = jnp.asarray(data), jnp.asarray(queries)
 mesh = make_mesh((8,), ("shard",))
 _, true_idx = nearest_neighbors(np.asarray(data), np.asarray(queries), K)
-print("scheme,T,build_ms,query_warm_ms,rows_per_query,recall_at_10,"
-      "collectives_per_query,union_exact")
+print("scheme,T,build_ms,query_cold_ms,query_warm_ms,jaxpr_lines,"
+      "rows_per_query,recall_at_10,collectives_per_query,union_exact")
+trace = {{}}
 for T in TABLES:
     cfg = LSHConfig(d=D, k=10, W=1.0, r=0.3, c=2.0, L=16, n_shards=8,
                     scheme=Scheme.LAYERED, seed=0, n_tables=T)
     idx = DistributedLSHIndex(cfg, mesh, k_neighbors=K)
     t0 = time.monotonic(); br = idx.build(data); t_b = time.monotonic() - t0
-    idx.query(queries)                       # warm the compiled path
+    # cold = trace + compile + run; jaxpr size must be FLAT in T (the
+    # gather-by-table hash pass does one table's work per routed row)
+    t0 = time.monotonic(); idx.query(queries); t_cold = time.monotonic()-t0
+    trace[f"compile_s_T{{T}}"] = round(t_cold, 3)
+    st = idx.store
+    qf = idx._make_query_fn(M, st.capacity, idx._query_capacity(M // 8),
+                            False, K)
+    trace[f"jaxpr_lines_T{{T}}"] = str(jax.make_jaxpr(qf)(
+        queries, jnp.arange(M, dtype=jnp.int32), st.x, st.packed, st.gid,
+        st.table, st.valid)).count("\\n")
+    jaxpr_lines = trace[f"jaxpr_lines_T{{T}}"]
     t0 = time.monotonic(); qr = idx.query(queries); t_q = time.monotonic()-t0
     assert br.drops == 0 and qr.drops == 0, (T, br.drops, qr.drops)
     rec = recall_at_k(qr.topk_gid, true_idx)
@@ -146,10 +157,16 @@ for T in TABLES:
     exact = bool(np.array_equal(qr.topk_gid, refg))
     rep = simulate(cfg, data, queries)
     assert abs(qr.fq.mean() - rep.fq_mean) < 1e-6
-    print(f"layered,{{T}},{{t_b*1e3:.1f}},{{t_q*1e3:.1f}},"
+    print(f"layered,{{T}},{{t_b*1e3:.1f}},{{t_cold*1e3:.1f}},"
+          f"{{t_q*1e3:.1f}},{{jaxpr_lines}},"
           f"{{qr.fq.mean():.2f}},{{rec:.3f}},{{COLLECTIVES_PER_QUERY}},"
           f"{{exact}}")
     assert exact, T
+lines = [v for k, v in trace.items() if k.startswith("jaxpr_lines")]
+if len(lines) > 1:
+    assert max(lines) <= 1.25 * min(lines), ("query jaxpr grows with T",
+                                             trace)
+print("TRACE_JSON " + json.dumps(trace))
 """
 
 
@@ -173,12 +190,24 @@ def main(smoke: bool = False):
     return _run_script(_SCRIPT.format(**sizes))
 
 
-def tables_sweep(smoke: bool = False, tables=(1, 2, 4)):
+def tables_sweep(smoke: bool = False, tables=(1, 2, 4)) -> dict:
     """Fused multi-table sweep: latency / traffic / recall@10 vs T, with
     an exact-agreement check against the single-machine union reference
-    and the constant per-step collective count."""
+    and the constant per-step collective count.
+
+    Also measures the query step's trace cost per T -- ``jaxpr_lines_T<t>``
+    (pretty-printed jaxpr line count; FLAT in T with the gather-by-table
+    hash pass, asserted within 25%) and ``compile_s_T<t>`` (cold trace +
+    compile + run wall time) -- and returns them as a dict so ``run.py
+    --smoke --json`` can record them for the CI regression gate
+    (``check_regression`` holds jaxpr_lines_* to a tight 1.15x)."""
+    import json
     sizes = dict(n=1024, m=64) if smoke else dict(n=4096, m=256)
-    return _run_script(_TABLES_SCRIPT.format(tables=tuple(tables), **sizes))
+    out = _run_script(_TABLES_SCRIPT.format(tables=tuple(tables), **sizes))
+    for line in out.splitlines():
+        if line.startswith("TRACE_JSON "):
+            return json.loads(line[len("TRACE_JSON "):])
+    raise RuntimeError(f"no TRACE_JSON line in tables_sweep output:\n{out}")
 
 
 if __name__ == "__main__":

@@ -14,6 +14,12 @@ jitter.  Benches new in the current run pass with a note (refresh the
 baseline to start tracking them); benches that vanished fail, since a
 silently-dropped bench would hide a regression forever.
 
+``jaxpr_lines_*`` metrics (the query-step trace size recorded by the
+tables sweep at T in {1, 2, 4}) are gated with a TIGHTER 1.15x bound:
+trace size is deterministic (no runner noise), and growth there means a
+structural regression -- e.g. a per-table Python loop reappearing in a
+hot path -- that wall time on a tiny smoke config would hide.
+
 To refresh after an intentional change:
   PYTHONPATH=src python -m benchmarks.run --smoke --json \
       benchmarks/baseline_ci.json
@@ -26,6 +32,9 @@ import sys
 
 # guards the ratio against meaninglessly tiny baselines (timer noise)
 MIN_BASELINE_S = 0.05
+
+# trace size is deterministic, so the gate is much tighter than wall time
+JAXPR_THRESHOLD = 1.15
 
 
 def compare(current: dict, baseline: dict, threshold: float) -> list[str]:
@@ -53,6 +62,34 @@ def compare(current: dict, baseline: dict, threshold: float) -> list[str]:
             failures.append(
                 f"{name}: {c:.2f}s vs baseline {b:.2f}s "
                 f"({ratio:.2f}x > {threshold}x)")
+        # deterministic structural metrics: compiled trace size must stay
+        # flat (a per-table loop creeping back in shows up here first).
+        # Same vanish policy as whole benches: a gated metric that stops
+        # being recorded FAILS -- a silently-dropped gate hides exactly
+        # the structural regression it exists to catch.
+        metrics = {k for src in (base[name], cur[name]) for k in src
+                   if k.startswith("jaxpr_lines")}
+        for metric in sorted(metrics):
+            label = f"{name}.{metric}"
+            if metric not in cur[name]:
+                failures.append(
+                    f"{label}: present in baseline but not recorded")
+                print(f"{label:<28} {base[name][metric]:>8d} {'--':>8} "
+                      f"{'--':>6}  MISSING")
+                continue
+            if metric not in base[name]:
+                print(f"{label:<28} {'--':>8} {cur[name][metric]:>8d} "
+                      f"{'--':>6}  new (not gated)")
+                continue
+            mb, mc = max(base[name][metric], 1), cur[name][metric]
+            mratio = mc / mb
+            mok = mratio <= JAXPR_THRESHOLD
+            print(f"{label:<28} {mb:>8d} {mc:>8d} "
+                  f"{mratio:>6.2f}  {'ok' if mok else 'REGRESSION'}")
+            if not mok:
+                failures.append(
+                    f"{label}: {mc} lines vs baseline {mb} "
+                    f"({mratio:.2f}x > {JAXPR_THRESHOLD}x)")
     return failures
 
 

@@ -95,10 +95,12 @@ def smoke(json_out: str | None = None):
     _section("smoke: distributed index + streaming serve (8 host devices)")
     rec.run("distributed_streaming", lambda: bench_distributed.main(
         smoke=True))
-    _section("smoke: fused multi-table T-sweep (8 host devices)")
-    rec.run("distributed_tables_sweep",
-            lambda: bench_distributed.tables_sweep(smoke=True,
-                                                   tables=(1, 2, 4)))
+    _section("smoke: fused multi-table T-sweep + query trace cost "
+             "(8 host devices)")
+    trace = rec.run("distributed_tables_sweep",
+                    lambda: bench_distributed.tables_sweep(smoke=True,
+                                                           tables=(1, 2, 4)))
+    rec.note("distributed_tables_sweep", **trace)
     print("\nsmoke OK: all benchmark scripts import and run")
     if json_out:
         rec.dump(json_out)
@@ -167,10 +169,13 @@ def main(argv=None):
         rec.run("distributed_streaming", bench_distributed.main)
         print(f"distributed,{(time.monotonic() - t0) * 1e6:.0f},devices=8")
 
-        _section("fused multi-table T-sweep (8 host devices, subprocess)")
+        _section("fused multi-table T-sweep + query trace cost "
+                 "(8 host devices, subprocess)")
         t0 = time.monotonic()
-        rec.run("distributed_tables_sweep",
-                lambda: bench_distributed.tables_sweep(tables=(1, 2, 4)))
+        trace = rec.run("distributed_tables_sweep",
+                        lambda: bench_distributed.tables_sweep(
+                            tables=(1, 2, 4)))
+        rec.note("distributed_tables_sweep", **trace)
         print(f"tables_sweep,{(time.monotonic() - t0) * 1e6:.0f},T=1/2/4")
 
         import os

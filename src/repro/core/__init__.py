@@ -9,11 +9,12 @@ Layers:
   ref_search -- brute-force oracle
 """
 from repro.core.config import LSHConfig, Scheme, collision_probability, p_collision
-from repro.core.hashing import (HashParams, gamma, gh, g_of, hash_h,
-                                pack_buckets, sample_params,
-                                sample_table_params, shard_key, shard_of,
-                                table_key)
+from repro.core.hashing import (HashParams, StackedHashParams, gamma, gh,
+                                g_of, hash_h, pack_buckets, sample_params,
+                                sample_stacked_params, sample_table_params,
+                                shard_key, shard_of, table_key)
 from repro.core.offsets import (batch_query_offsets, query_offsets,
+                                query_offsets_by_table, stacked_base_keys,
                                 table_base_key)
 from repro.core.accounting import (COLLECTIVES_PER_INSERT,
                                    COLLECTIVES_PER_QUERY, TrafficReport)
@@ -24,10 +25,11 @@ from repro.core.index import DistributedLSHIndex, first_occurrence_mask
 
 __all__ = [
     "LSHConfig", "Scheme", "collision_probability", "p_collision",
-    "HashParams", "gamma", "gh", "g_of", "hash_h", "pack_buckets",
-    "sample_params", "sample_table_params", "table_key", "shard_key",
-    "shard_of",
-    "batch_query_offsets", "query_offsets", "table_base_key",
+    "HashParams", "StackedHashParams", "gamma", "gh", "g_of", "hash_h",
+    "pack_buckets", "sample_params", "sample_stacked_params",
+    "sample_table_params", "table_key", "shard_key", "shard_of",
+    "batch_query_offsets", "query_offsets", "query_offsets_by_table",
+    "stacked_base_keys", "table_base_key",
     "TrafficReport", "COLLECTIVES_PER_INSERT", "COLLECTIVES_PER_QUERY",
     "simulate", "StreamReport", "simulate_stream",
     "lsh_topk_reference", "recall_at_k",

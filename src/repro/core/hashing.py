@@ -45,6 +45,75 @@ class HashParams:
         return cls(*children)
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class StackedHashParams:
+    """All T tables' ``HashParams`` stacked on a leading table axis.
+
+    This is the index's CANONICAL parameter form: every field carries a
+    leading ``(T, ...)`` axis, so the hot paths hash under all tables with
+    ONE vmapped call (params broadcast over the T axis) instead of a
+    Python loop, and the receive side gathers ``params[table_id]`` per
+    routed row and hashes once -- O(L*k*d) per row instead of O(T*L*k*d),
+    with compiled trace size independent of T.
+
+    Stacking preserves each table's values bit-for-bit (``jnp.stack`` of
+    the per-table samples), and the vmapped/gathered matmuls contract over
+    d in the same order as the unstacked path, so table 0 of a stack
+    reproduces the single-table hash stream bitwise (tested).
+    """
+
+    A: jax.Array          # (T, d, k)
+    b: jax.Array          # (T, k)
+    alpha: jax.Array      # (T, k)
+    beta: jax.Array       # (T,)
+    alpha_cauchy: jax.Array  # (T, k)
+    pack_mult: jax.Array  # (T, k, 2)
+    pack_add: jax.Array   # (T, 2)
+
+    def tree_flatten(self):
+        return (
+            (self.A, self.b, self.alpha, self.beta, self.alpha_cauchy,
+             self.pack_mult, self.pack_add),
+            None,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def n_tables(self) -> int:
+        return self.A.shape[0]
+
+    @classmethod
+    def stack(cls, tables: list[HashParams]) -> "StackedHashParams":
+        """Stack per-table ``HashParams`` (bit-preserving)."""
+        if not tables:
+            raise ValueError("need at least one table")
+        return cls(*(jnp.stack([getattr(p, f.name) for p in tables])
+                     for f in dataclasses.fields(HashParams)))
+
+    def table(self, t: int) -> HashParams:
+        """Per-table compat view (table t's parameters, unstacked)."""
+        return HashParams(self.A[t], self.b[t], self.alpha[t], self.beta[t],
+                          self.alpha_cauchy[t], self.pack_mult[t],
+                          self.pack_add[t])
+
+    def as_tables(self) -> list[HashParams]:
+        return [self.table(t) for t in range(self.n_tables)]
+
+    def gather(self, tables: jax.Array) -> HashParams:
+        """Per-row parameter gather: ``tables`` (R,) int32 table ids ->
+        a ``HashParams`` pytree whose every field carries a leading R
+        axis (row i holds table ``tables[i]``'s parameters), ready for a
+        row-wise ``jax.vmap`` of the hash functions."""
+        return HashParams(self.A[tables], self.b[tables],
+                          self.alpha[tables], self.beta[tables],
+                          self.alpha_cauchy[tables],
+                          self.pack_mult[tables], self.pack_add[tables])
+
+
 def table_key(key: jax.Array, table: int) -> jax.Array:
     """RNG key for one table of a multi-table config.
 
@@ -86,6 +155,12 @@ def sample_table_params(key: jax.Array, cfg: LSHConfig) -> list[HashParams]:
     """
     return [sample_params(table_key(key, t), cfg)
             for t in range(cfg.n_tables)]
+
+
+def sample_stacked_params(key: jax.Array, cfg: LSHConfig) -> StackedHashParams:
+    """The canonical stacked form of ``sample_table_params`` (same values,
+    leading T axis on every field)."""
+    return StackedHashParams.stack(sample_table_params(key, cfg))
 
 
 # ---------------------------------------------------------------------------

@@ -18,9 +18,11 @@ argument applied to our own wire):
           -- one per DISTINCT Key per table (Theorem 8 bounds the
           per-table count) -- again through ONE fused all_to_all
   search: the receiving shard regenerates the offsets from (qid, table)
-          (consistent RNG), selects those whose Key == its own id, and
-          scans its stored rows for bucket-equal SAME-TABLE points within
-          distance cr (Fig 3.2 Reduce, with a table mask)
+          (consistent RNG) by GATHERING the row's own table's stacked
+          parameters and hashing ONCE (O(L*k*d) per row, not O(T*L*k*d)),
+          selects those whose Key == its own id, and scans its stored
+          rows for bucket-equal SAME-TABLE points within distance cr
+          (Fig 3.2 Reduce, with a table mask)
   return: each shard merges its local per-qid candidates across tables,
           then a single routed all_to_all ships every qid's local top-K
           (plus its emit count) ONLY to the qid's owner shard, which
@@ -59,9 +61,11 @@ from jax.sharding import Mesh
 
 from repro.compat import shard_map
 from repro.core.config import LSHConfig, Scheme
-from repro.core.hashing import (hash_h, pack_buckets, sample_table_params,
+from repro.core.hashing import (HashParams, StackedHashParams, hash_h,
+                                pack_buckets, sample_stacked_params,
                                 shard_key)
-from repro.core.offsets import query_offsets, table_base_key
+from repro.core.offsets import (query_offsets, query_offsets_by_table,
+                                stacked_base_keys)
 from repro.core.ref_search import topk_sort_jnp
 
 INF = jnp.float32(jnp.finfo(jnp.float32).max)
@@ -124,6 +128,17 @@ def first_occurrence_mask(keys: jax.Array, valid: jax.Array) -> jax.Array:
         [jnp.ones((1,), bool), s[1:] != s[:-1]])
     first = jnp.zeros((R,), bool).at[order].set(first_sorted)
     return first & valid
+
+
+def check_gid_range(gids: np.ndarray) -> None:
+    """Reject gids outside [0, IMAX): the int32 sentinel IMAX marks
+    empty/tombstoned slots and pads delete batches, so a caller-supplied
+    gid >= IMAX (or negative, which int32 casts could wrap into) would
+    silently alias padding and be ignored."""
+    if gids.size and (int(gids.min()) < 0 or int(gids.max()) >= int(IMAX)):
+        raise ValueError(
+            f"gids must lie in [0, {int(IMAX)}): values >= the int32 "
+            f"sentinel IMAX (or negative) alias empty-slot/batch padding")
 
 
 def merge_topk(cand_d: jax.Array, cand_g: jax.Array,
@@ -271,21 +286,66 @@ class DistributedLSHIndex:
         self.k_neighbors = k_neighbors
         key = jax.random.PRNGKey(cfg.seed)
         kp, kq = jax.random.split(key)
-        # per-table (A, b, alpha, beta, packing) from split keys; table 0
-        # == the single-table parameter stream (bit-for-bit)
-        self.table_params = sample_table_params(kp, cfg)
-        self.params = self.table_params[0]
-        self.table_keys = [table_base_key(kq, t)
-                           for t in range(cfg.n_tables)]
+        self._insert_fns: dict = {}
+        self._delete_fns: dict = {}
+        self._query_fns: dict = {}
+        # CANONICAL form: all T tables' (A, b, alpha, beta, packing)
+        # stacked on a leading T axis (sampled from split keys; table 0
+        # == the single-table parameter stream, bit-for-bit), plus the
+        # matching (T, ...) stack of offset base keys.  The per-table
+        # ``table_params``/``table_keys`` below are compat views.
+        self.stacked_params = sample_stacked_params(kp, cfg)
+        self.params = self.stacked_params.table(0)
+        self.stacked_keys = stacked_base_keys(kq, cfg.n_tables)
         self.base_key = kq
         self.store: Optional[StoreState] = None
         self._shard_load = np.zeros((cfg.n_shards,), np.int64)
         self._drops = 0
         self._n_live = 0
         self._next_gid = 0
-        self._insert_fns: dict = {}
-        self._delete_fns: dict = {}
-        self._query_fns: dict = {}
+
+    # ------------------------------------------------------------------
+    # Per-table parameter views (compat): the stacked form is canonical;
+    # assigning a per-table list restacks it (and invalidates the cached
+    # compiled steps, which close over the parameters).
+    # ------------------------------------------------------------------
+    @property
+    def table_params(self) -> list[HashParams]:
+        return self.stacked_params.as_tables()
+
+    @table_params.setter
+    def table_params(self, tables) -> None:
+        tables = list(tables)
+        if len(tables) != self.cfg.n_tables:
+            raise ValueError(f"need {self.cfg.n_tables} tables, "
+                             f"got {len(tables)}")
+        if self.store is not None:
+            # stored rows were bucketed/routed under the OLD params;
+            # probing them with new-param keys silently returns garbage
+            raise RuntimeError(
+                "cannot replace table params on a populated index -- "
+                "assign before build()/insert()")
+        self.stacked_params = StackedHashParams.stack(tables)
+        self.params = self.stacked_params.table(0)
+        self._insert_fns.clear()
+        self._query_fns.clear()
+
+    @property
+    def table_keys(self) -> list[jax.Array]:
+        return [self.stacked_keys[t] for t in range(self.cfg.n_tables)]
+
+    @table_keys.setter
+    def table_keys(self, keys) -> None:
+        keys = list(keys)
+        if len(keys) != self.cfg.n_tables:
+            raise ValueError(f"need {self.cfg.n_tables} keys, "
+                             f"got {len(keys)}")
+        if self.store is not None:
+            raise RuntimeError(
+                "cannot replace offset keys on a populated index -- "
+                "assign before build()/insert()")
+        self.stacked_keys = jnp.stack(keys)
+        self._query_fns.clear()
 
     # ------------------------------------------------------------------
     # Capacity policy
@@ -364,23 +424,24 @@ class DistributedLSHIndex:
     # ------------------------------------------------------------------
     def _make_insert_fn(self, n_loc: int, Ci: int, cap: int):
         cfg = self.cfg
-        tparams = self.table_params
+        sparams = self.stacked_params
         S, T, d = cfg.n_shards, cfg.n_tables, cfg.d
         axis = self.axis
 
         def insert_shard(x_loc, gid_loc, valid_loc, sx, sp, sg, stb, sv):
             sx, sp = sx[0], sp[0]
             sg, stb, sv = sg[0], stb[0], sv[0]
-            # ---- per-table hashing: T routed copies per point,
-            # point-major row order (table t of point i at row i*T+t) ----
-            packs, dests = [], []
-            for t in range(T):
-                hk = hash_h(tparams[t], x_loc, cfg.W)      # (n_loc, k)
-                packs.append(pack_buckets(tparams[t], hk))
-                dests.append(jnp.mod(shard_key(tparams[t], cfg, hk),
-                                     S).astype(jnp.int32))
-            packed = jnp.stack(packs, axis=1).reshape(n_loc * T, 2)
-            dest = jnp.stack(dests, axis=1).reshape(n_loc * T)
+            # ---- hashing: T routed copies per point in ONE vmapped pass
+            # (params broadcast over the stacked T axis -- trace size is
+            # independent of T), point-major row order (table t of point
+            # i at row i*T+t) ----
+            def hash_table(p):
+                hk = hash_h(p, x_loc, cfg.W)               # (n_loc, k)
+                return (pack_buckets(p, hk),
+                        jnp.mod(shard_key(p, cfg, hk), S).astype(jnp.int32))
+            packs, dests = jax.vmap(hash_table)(sparams)   # (T, n_loc, .)
+            packed = jnp.swapaxes(packs, 0, 1).reshape(n_loc * T, 2)
+            dest = jnp.swapaxes(dests, 0, 1).reshape(n_loc * T)
             rows_x = jnp.repeat(x_loc, T, axis=0)          # (n_loc*T, d)
             rows_g = jnp.repeat(gid_loc, T)
             rows_t = jnp.tile(jnp.arange(T, dtype=jnp.int32), n_loc)
@@ -457,15 +518,25 @@ class DistributedLSHIndex:
         if d != cfg.d:
             raise ValueError(f"points d={d} != cfg.d={cfg.d}")
         if gids is None:
+            # the auto-gid counter must not mint the IMAX sentinel either
+            # (reachable: an explicit insert at the legal boundary IMAX-1
+            # advances _next_gid to IMAX)
+            if n and self._next_gid + n - 1 >= int(IMAX):
+                raise ValueError(
+                    f"auto-gid space exhausted: this batch would assign "
+                    f"gids up to {self._next_gid + n - 1} >= the int32 "
+                    f"sentinel {int(IMAX)}; pass explicit in-range gids")
             gid_start = self._next_gid if n else None
             gids = jnp.arange(self._next_gid, self._next_gid + n,
                               dtype=jnp.int32)
             self._next_gid += n
         else:
-            gids = jnp.asarray(gids, jnp.int32)
+            g64 = np.asarray(gids, np.int64)
+            check_gid_range(g64)
+            gids = jnp.asarray(g64, jnp.int32)
             # the batch's actual minimum gid (NOT the unrelated _next_gid)
-            gid_start = int(np.asarray(gids).min()) if n else None
-            self._next_gid = max(self._next_gid, int(np.asarray(gids).max())
+            gid_start = int(g64.min()) if n else None
+            self._next_gid = max(self._next_gid, int(g64.max())
                                  + 1) if n else self._next_gid
 
         if self.store is None:
@@ -538,7 +609,9 @@ class DistributedLSHIndex:
         """
         if self.store is None:
             raise RuntimeError("insert() or build() first")
-        gids = np.asarray(gids, np.int32).reshape(-1)
+        gids = np.asarray(gids, np.int64).reshape(-1)
+        check_gid_range(gids)
+        gids = gids.astype(np.int32)
         n_pad = max(8, int(math.ceil(len(gids) / 8)) * 8)
         padded = np.full((n_pad,), np.iinfo(np.int32).max, np.int32)
         padded[:len(gids)] = gids
@@ -604,21 +677,18 @@ class DistributedLSHIndex:
     def _make_query_fn(self, m: int, cap: int, Cq: int, donate: bool,
                        K: int):
         cfg = self.cfg
-        tparams, tkeys = self.table_params, self.table_keys
+        sparams, skeys = self.stacked_params, self.stacked_keys
         S, L, T, d = cfg.n_shards, cfg.L, cfg.n_tables, cfg.d
         axis = self.axis
         m_loc = m // S
         cr2 = jnp.float32((cfg.c * cfg.r) ** 2)
         use_kernel = self.use_kernel
 
-        def offsets_of(t, qid, q):
-            return query_offsets(tkeys[t], qid, q, L, cfg.r)
-
-        def keys_of(t, offs):
-            """Table-t offsets (L, d) -> (Key, packedH) per offset."""
-            hk = hash_h(tparams[t], offs, cfg.W)        # (L, k)
-            packed = pack_buckets(tparams[t], hk)       # (L, 2)
-            keyv = shard_key(tparams[t], cfg, hk)       # (L,)
+        def keys_of(p, offs):
+            """One table's offsets (L, d) -> (Key, packedH) per offset."""
+            hk = hash_h(p, offs, cfg.W)                 # (L, k)
+            packed = pack_buckets(p, hk)                # (L, 2)
+            keyv = shard_key(p, cfg, hk)                # (L,)
             return keyv, packed
 
         def live_mask(keyv, packed):
@@ -637,17 +707,18 @@ class DistributedLSHIndex:
             store_table = store_table[0]
             me = jax.lax.axis_index(axis)
 
-            # ---- route: T tables x L offsets per local query ----
-            key_ts, live_ts = [], []
-            for t in range(T):
+            # ---- route: each local query's T x L offsets hashed in ONE
+            # vmapped pass, params broadcast over the stacked T axis (the
+            # trace no longer grows with T) ----
+            def route_table(p, bk):
                 offs = jax.vmap(
-                    lambda i, q, t=t: offsets_of(t, i, q))(qid_loc, q_loc)
-                keyv, packed = jax.vmap(
-                    lambda o, t=t: keys_of(t, o))(offs)
-                key_ts.append(keyv)                      # (m_loc, L)
-                live_ts.append(jax.vmap(live_mask)(keyv, packed))
-            keyv = jnp.stack(key_ts, axis=1)             # (m_loc, T, L)
-            live = jnp.stack(live_ts, axis=1)
+                    lambda i, q: query_offsets(bk, i, q, L, cfg.r))(
+                        qid_loc, q_loc)                  # (m_loc, L, d)
+                keyv, packed = jax.vmap(lambda o: keys_of(p, o))(offs)
+                return keyv, jax.vmap(live_mask)(keyv, packed)
+            key_t, live_t = jax.vmap(route_table)(sparams, skeys)
+            keyv = jnp.swapaxes(key_t, 0, 1)             # (m_loc, T, L)
+            live = jnp.swapaxes(live_t, 0, 1)
             dest = jnp.mod(keyv, S).astype(jnp.int32).reshape(-1)
             rows_q = jnp.repeat(q_loc, T * L, axis=0)    # (m_loc*T*L, d)
             rows_id = jnp.repeat(qid_loc, T * L)
@@ -682,18 +753,14 @@ class DistributedLSHIndex:
             rid_safe = jnp.where(rvalid, rid, 0)
             rtab_safe = jnp.where(rvalid, rtab, 0)
 
-            # ---- regenerate offsets & select buckets owned by me,
-            # under each row's own table params ----
-            R = r.shape[0]
-            rkey = jnp.zeros((R, L), jnp.int32)
-            rpacked = jnp.zeros((R, L, 2), jnp.uint32)
-            for t in range(T):
-                offs_t = jax.vmap(
-                    lambda i, q, t=t: offsets_of(t, i, q))(rid_safe, rq)
-                k_t, p_t = jax.vmap(lambda o, t=t: keys_of(t, o))(offs_t)
-                sel = rtab_safe == t
-                rkey = jnp.where(sel[:, None], k_t, rkey)
-                rpacked = jnp.where(sel[:, None, None], p_t, rpacked)
+            # ---- regenerate offsets & select buckets owned by me: gather
+            # each row's OWN table params / offset key and hash ONCE
+            # (O(L*k*d) per row instead of the old hash-under-all-T-and-
+            # where-select, which paid O(T*L*k*d)) ----
+            roffs = query_offsets_by_table(
+                skeys, rtab_safe, rid_safe, rq, L, cfg.r)  # (R, L, d)
+            rkey, rpacked = jax.vmap(keys_of)(
+                sparams.gather(rtab_safe), roffs)          # (R, L) (R, L, 2)
             mine = (jnp.mod(rkey, S) == me) & rvalid[:, None]  # (R, L)
             # first-occurrence dedupe of H-buckets within the selected set
             eqp = jnp.all(rpacked[:, :, None, :] == rpacked[:, None, :, :], -1)

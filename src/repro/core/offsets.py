@@ -55,3 +55,32 @@ def table_base_key(base_key: jax.Array, table: int) -> jax.Array:
     entry points, so the nested-prefix invariant cannot diverge.
     """
     return table_key(base_key, table)
+
+
+def stacked_base_keys(base_key: jax.Array, n_tables: int) -> jax.Array:
+    """(T, *keyshape) stack of per-table offset base keys.
+
+    Row t equals ``table_base_key(base_key, t)`` bitwise, so gathering
+    row ``tables[i]`` regenerates exactly the offsets the per-table path
+    would (the stacked companion of ``StackedHashParams``).
+    """
+    return jnp.stack([table_base_key(base_key, t) for t in range(n_tables)])
+
+
+def query_offsets_by_table(base_keys: jax.Array, tables: jax.Array,
+                           qids: jax.Array, qs: jax.Array,
+                           L: int, r: float) -> jax.Array:
+    """Gather-by-table offsets for a batch of routed rows.
+
+    Args:
+      base_keys: (T, *keyshape) stacked per-table offset keys.
+      tables: (R,) int32 table id per row.
+      qids: (R,) int32 global query id per row.
+      qs: (R, d) query points.
+    Returns:
+      (R, L, d) offsets; row i equals
+      ``query_offsets(base_keys[tables[i]], qids[i], qs[i], L, r)``
+      bit-for-bit (vmapped fold_in + normal draw the same stream).
+    """
+    return jax.vmap(lambda bk, i, q: query_offsets(bk, i, q, L, r))(
+        base_keys[tables], qids, qs)

@@ -23,9 +23,10 @@ import numpy as np
 
 from repro.core import accounting
 from repro.core.config import LSHConfig, Scheme
-from repro.core.hashing import (HashParams, hash_h, pack_buckets,
-                                sample_table_params, shard_key, shard_of)
-from repro.core.offsets import batch_query_offsets, table_base_key
+from repro.core.hashing import (HashParams, StackedHashParams, hash_h,
+                                pack_buckets, sample_stacked_params,
+                                shard_key, shard_of)
+from repro.core.offsets import batch_query_offsets, stacked_base_keys
 
 
 def _dedupe_mask_2d(vals: jax.Array) -> jax.Array:
@@ -48,19 +49,47 @@ def _dedupe_mask_packed(packed: jax.Array) -> jax.Array:
 
 @dataclasses.dataclass
 class SimState:
+    """Sampled scheme state.  The stacked leading-T-axis form is the ONLY
+    stored representation (same canonical derivation as
+    ``DistributedLSHIndex``); per-table params/keys are derived views."""
     cfg: LSHConfig
-    params: HashParams                 # table 0 (single-table compat view)
-    base_key: jax.Array                # table 0 offset key
-    table_params: List[HashParams]     # one per fused table
-    table_keys: List[jax.Array]        # per-table offset base keys
+    stacked_params: StackedHashParams  # CANONICAL: leading-T-axis params
+    stacked_keys: jax.Array            # (T, ...) offset base keys
+
+    @property
+    def params(self) -> HashParams:
+        """Table 0 (single-table compat view)."""
+        return self.stacked_params.table(0)
+
+    @property
+    def base_key(self) -> jax.Array:
+        """Table 0 offset key (== the pre-split base key)."""
+        return self.stacked_keys[0]
+
+    @property
+    def table_params(self) -> List[HashParams]:
+        return self.stacked_params.as_tables()
+
+    @property
+    def table_keys(self) -> List[jax.Array]:
+        return [self.stacked_keys[t] for t in range(self.cfg.n_tables)]
 
 
 def make_sim(cfg: LSHConfig) -> SimState:
     key = jax.random.PRNGKey(cfg.seed)
     kp, kq = jax.random.split(key)
-    tparams = sample_table_params(kp, cfg)
-    tkeys = [table_base_key(kq, t) for t in range(cfg.n_tables)]
-    return SimState(cfg, tparams[0], kq, tparams, tkeys)
+    return SimState(cfg, sample_stacked_params(kp, cfg),
+                    stacked_base_keys(kq, cfg.n_tables))
+
+
+def _data_shards(sim: SimState, data: jax.Array) -> np.ndarray:
+    """(T, n) destination shard of every point under every table -- one
+    vmapped hash pass over the stacked T axis (matches the fused index's
+    insert dispatch)."""
+    cfg = sim.cfg
+    return np.asarray(jax.vmap(
+        lambda p: shard_of(p, cfg, hash_h(p, data, cfg.W)))(
+            sim.stacked_params))
 
 
 def _probe_hashes(sim: SimState, queries: jax.Array, qids: jax.Array,
@@ -109,12 +138,11 @@ def simulate(cfg: LSHConfig, data: jax.Array, queries: jax.Array,
     q_rows_t, d_rows_t = [], []
     probes_t: list = []          # per-table (hk_off, pvalid) for recall
 
+    # index build: one row per point per table, hashed in one stacked pass
+    data_shard_T = _data_shards(sim, data)             # (T, n)
     for t in range(T):
         params = sim.table_params[t]
-        # ------------- index build: one row per point per table --------
-        hk_data = hash_h(params, data, cfg.W)          # (n, k)
-        data_shard = shard_of(params, cfg, hk_data)    # (n,)
-        data_load += np.bincount(np.asarray(data_shard), minlength=S)
+        data_load += np.bincount(data_shard_T[t], minlength=S)
         d_rows_t.append(n)
 
         # ------------- query routing -----------------------------------
@@ -260,11 +288,7 @@ def simulate_stream(cfg: LSHConfig, data: jax.Array, queries: jax.Array,
     m_all = queries.shape[0]
     S, T = cfg.n_shards, cfg.n_tables
 
-    data_shard_t = []                  # (T,) arrays of (n,) shard ids
-    for t in range(T):
-        hk_data = hash_h(sim.table_params[t], data, cfg.W)
-        data_shard_t.append(np.asarray(shard_of(sim.table_params[t], cfg,
-                                                hk_data)))
+    data_shard_t = _data_shards(sim, data)   # (T, n) shard ids
     load = np.zeros((S,), np.int64)
     for t in range(T):
         load += np.bincount(data_shard_t[t][:n_prefix], minlength=S)

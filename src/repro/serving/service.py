@@ -173,6 +173,11 @@ class ShardedLSHService:
         handles = self._pending[:take]
         rows = self._pending_q[:take]
         del self._pending[:take], self._pending_q[:take]
+        # the deadline of the queries being flushed -- restored verbatim
+        # if the query step fails and they are requeued below, so a
+        # requeued query keeps its original SLO instead of losing the
+        # deadline until a fresh submit arrives
+        prev_deadline = self._deadline
         self._deadline = (time.monotonic() + self.max_latency_ms / 1e3
                           if self._pending else None)
 
@@ -186,9 +191,12 @@ class ShardedLSHService:
                                    k_neighbors=self.k_neighbors)
         except BaseException:
             # a failed query step must not orphan the handles (result()
-            # would spin forever on an empty queue): requeue and surface
+            # would spin forever on an empty queue): requeue with their
+            # ORIGINAL deadline (already advanced/cleared above) and
+            # surface the error
             self._pending[:0] = handles
             self._pending_q[:0] = rows
+            self._deadline = prev_deadline
             raise
         dt = time.monotonic() - t0
 
