@@ -68,7 +68,7 @@ def smoke(json_out: str | None = None):
     CI regression gate via --json.
     """
     from benchmarks import (bench_distributed, bench_kernels, bench_mplsh,
-                            bench_schemes, bench_shuffle_vs_L,
+                            bench_persist, bench_schemes, bench_shuffle_vs_L,
                             collective_report, paper_common, roofline)
     assert collective_report and roofline  # import-only (need artifacts)
     paper_common.set_scale(n=2000, m=200)
@@ -101,6 +101,11 @@ def smoke(json_out: str | None = None):
                     lambda: bench_distributed.tables_sweep(smoke=True,
                                                            tables=(1, 2, 4)))
     rec.note("distributed_tables_sweep", **trace)
+    _section("smoke: durability (snapshot/restore/WAL replay/elastic, "
+             "8 host devices)")
+    pm = rec.run("persist_durability",
+                 lambda: bench_persist.main(smoke=True))
+    rec.note("persist_durability", **pm)
     print("\nsmoke OK: all benchmark scripts import and run")
     if json_out:
         rec.dump(json_out)
@@ -177,6 +182,14 @@ def main(argv=None):
                             tables=(1, 2, 4)))
         rec.note("distributed_tables_sweep", **trace)
         print(f"tables_sweep,{(time.monotonic() - t0) * 1e6:.0f},T=1/2/4")
+
+        _section("durability: snapshot/restore/WAL replay/elastic re-shard "
+                 "(8 host devices, subprocess)")
+        from benchmarks import bench_persist
+        t0 = time.monotonic()
+        pm = rec.run("persist_durability", bench_persist.main)
+        rec.note("persist_durability", **pm)
+        print(f"persist,{(time.monotonic() - t0) * 1e6:.0f},sizes=2")
 
         import os
         from benchmarks import roofline

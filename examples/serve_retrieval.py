@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import persist
 from repro.compat import make_mesh
 from repro.configs import get_config
 from repro.core import Scheme
@@ -38,6 +39,13 @@ def main():
     ap.add_argument("--tables", type=int, default=1,
                     help="fused hash tables (union recall lever; the "
                          "collective count per step does not change)")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="durability: WAL every insert, snapshot "
+                         "periodically, warm-restart from the latest "
+                         "snapshot + WAL tail on reboot")
+    ap.add_argument("--snapshot-every", type=int, default=2,
+                    help="snapshot (and truncate the WAL) every N serve "
+                         "steps (with --snapshot-dir)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=True)
@@ -45,29 +53,52 @@ def main():
     mesh = make_mesh((8,), ("shard",))
 
     # synthetic "documents": token sequences; queries are near-duplicate
-    # docs (the dedup / near-dup search use-case)
+    # docs (the dedup / near-dup search use-case).  NOTE: the corpus is
+    # drawn as ONE (n_total, 32) tensor, so a warm restart only replays
+    # the same documents if --docs/--steps/--insert-size match the
+    # previous run (different shapes draw a different synthetic corpus)
     key = jax.random.PRNGKey(1)
     n_total = args.docs + args.steps * args.insert_size
     doc_tokens = jax.random.randint(key, (n_total, 32), 0, cfg.vocab)
 
     t0 = time.monotonic()
-    svc = RetrievalService.build(cfg, params, doc_tokens[:args.docs], mesh,
-                                 r=0.2, L=16, k=8, W=0.5,
-                                 scheme=Scheme.LAYERED,
-                                 bucket_size=args.batch_size,
-                                 k_neighbors=args.k_neighbors,
-                                 n_tables=args.tables)
-    print(f"[build] indexed {args.docs} docs in "
-          f"{time.monotonic() - t0:.1f}s "
-          f"(data load max={svc.index.build_result.data_load.max()})")
+    svc, rr = RetrievalService.recover_or_build(
+        cfg, params, doc_tokens[:args.docs], mesh,
+        snapshot_dir=args.snapshot_dir, bucket_size=args.batch_size,
+        k_neighbors=args.k_neighbors, r=0.2, L=16, k=8, W=0.5,
+        scheme=Scheme.LAYERED, n_tables=args.tables)
+    if rr is not None:
+        print(f"[build] WARM restart: snapshot step {rr.step} + "
+              f"{rr.replayed_inserts + rr.replayed_deletes} WAL batches "
+              f"({rr.index.n_live} rows) in {time.monotonic() - t0:.1f}s")
+    else:
+        print(f"[build] indexed {args.docs} docs in "
+              f"{time.monotonic() - t0:.1f}s "
+              f"(data load max={svc.index.build_result.data_load.max()})")
+        if args.snapshot_dir:
+            print(f"[build] boot snapshot -> {args.snapshot_dir}")
 
     hits = 0
-    n_indexed = args.docs
-    for b in range(args.steps):
+    # resume the stream where the restored index left off: a warm restart
+    # already holds the docs streamed before the crash, so re-running the
+    # insert steps from 0 would duplicate every one of them under fresh
+    # gids (the restored allocator keeps counting up)
+    n_restored = svc.index.n_live // svc.index.cfg.n_tables
+    b0 = min(max(0, (n_restored - args.docs) // args.insert_size),
+             args.steps)
+    if b0:
+        print(f"[serve] resuming stream at step {b0} "
+              f"({n_restored} docs already indexed)")
+    n_indexed = max(args.docs, n_restored)
+    for b in range(b0, args.steps):
         # ---- streaming insert: the corpus grows while we serve ----
         lo = args.docs + b * args.insert_size
         new_gids = svc.insert_docs(doc_tokens[lo:lo + args.insert_size])
         n_indexed += len(new_gids)
+        if (args.snapshot_dir and args.snapshot_every
+                and (b + 1) % args.snapshot_every == 0):
+            persist.snapshot(svc.index, args.snapshot_dir,
+                             wal=svc.service.wal)
 
         # ---- query mix: near-duplicates of docs indexed so far ----
         kq = jax.random.fold_in(jax.random.PRNGKey(2), b)
@@ -95,7 +126,7 @@ def main():
               f"load max/avg={load.max() / max(load.mean(), 1):.2f}")
 
     st = svc.service.stats
-    n = args.steps * args.batch_size
+    n = max((args.steps - b0) * args.batch_size, 1)
     print(f"[serve] total: self-retrieval {hits}/{n} ({hits / n:.1%}), "
           f"avg rows/query {st.routed_rows / max(st.queries, 1):.2f} "
           f"(vs L=16 for simple LSH)")

@@ -1,2 +1,3 @@
-from repro.checkpoint.checkpoint import latest_step, prune_old, restore, save
-__all__ = ["latest_step", "prune_old", "restore", "save"]
+from repro.checkpoint.checkpoint import (latest_step, load, prune_old,
+                                         restore, save)
+__all__ = ["latest_step", "load", "prune_old", "restore", "save"]

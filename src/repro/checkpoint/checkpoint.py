@@ -88,13 +88,16 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
         return None
 
 
-def restore(ckpt_dir: str, tree_like: Any, *, step: Optional[int] = None,
-            shardings: Any = None) -> tuple[Any, int, dict]:
-    """Restore into the structure of `tree_like`.
+def load(ckpt_dir: str, *, step: Optional[int] = None
+         ) -> tuple[dict, int, dict]:
+    """Load a checkpoint WITHOUT a template tree.
 
-    shardings: optional matching tree of NamedSharding -- leaves are
-    device_put with them (the elastic re-shard path).
-    Returns (tree, step, extra).
+    The template-free half of ``restore``: returns ``(by_path, step,
+    extra)`` where ``by_path`` maps each manifest leaf path to its numpy
+    array.  Callers that know their structure only at load time (e.g. a
+    snapshot whose row count is data-dependent, ``repro.persist``) use
+    this directly; ``restore`` layers the shape-checked template
+    reassembly on top.
     """
     if step is None:
         step = latest_step(ckpt_dir)
@@ -105,16 +108,26 @@ def restore(ckpt_dir: str, tree_like: Any, *, step: Optional[int] = None,
         manifest = json.load(f)
     shards = {s: np.load(os.path.join(d, f"shard_{s}.npz"))
               for s in range(manifest["nshards"])}
-    vals = []
+    by_path = {}
     for i, leaf in enumerate(manifest["leaves"]):
         arr = shards[leaf["shard"]][f"leaf_{i}"]
         view = _VIEW_DTYPES.get(leaf["dtype"])
         if view is not None:
             arr = arr.view(view[1])
-        vals.append(arr)
+        by_path[leaf["path"]] = arr
+    return by_path, step, manifest["extra"]
 
+
+def restore(ckpt_dir: str, tree_like: Any, *, step: Optional[int] = None,
+            shardings: Any = None) -> tuple[Any, int, dict]:
+    """Restore into the structure of `tree_like`.
+
+    shardings: optional matching tree of NamedSharding -- leaves are
+    device_put with them (the elastic re-shard path).
+    Returns (tree, step, extra).
+    """
+    by_path, step, extra = load(ckpt_dir, step=step)
     paths, cur_vals, treedef = _flatten_with_paths(tree_like)
-    by_path = {l["path"]: v for l, v in zip(manifest["leaves"], vals)}
     out_vals = []
     for p, cur in zip(paths, cur_vals):
         if p not in by_path:
@@ -128,7 +141,7 @@ def restore(ckpt_dir: str, tree_like: Any, *, step: Optional[int] = None,
     if shardings is not None:
         tree = jax.tree.map(lambda x, s: jax.device_put(x, s),
                             tree, shardings)
-    return tree, step, manifest["extra"]
+    return tree, step, extra
 
 
 def prune_old(ckpt_dir: str, keep: int = 3):

@@ -188,6 +188,10 @@ class StoreState:
     packed: jax.Array     # (S, cap, 2) packed H buckets (uint32)
     gid: jax.Array        # (S, cap) global data ids (IMAX = empty)
     table: jax.Array      # (S, cap) int32 table id of each row
+    key: jax.Array        # (S, cap) int32 routing Key (shard_key of the
+    #                       row at insert time; shard-count-INDEPENDENT,
+    #                       so compaction / elastic restore re-route rows
+    #                       as Key mod S' without re-hashing)
     valid: jax.Array      # (S, cap) bool liveness (False = free/tombstone)
 
     @property
@@ -201,6 +205,7 @@ class BuildResult:
     store_packed: jax.Array   # (S, cap, 2) packed H buckets
     store_gid: jax.Array      # (S, cap) global data ids
     store_table: jax.Array    # (S, cap) table id per row
+    store_key: jax.Array      # (S, cap) int32 routing Key per row
     store_valid: jax.Array    # (S, cap) bool
     data_load: np.ndarray     # (S,) live rows stored per shard (all tables)
     drops: int                # capacity overflow (must be 0)
@@ -219,7 +224,17 @@ class InsertResult:
 @dataclasses.dataclass
 class DeleteResult:
     n_deleted: int            # rows tombstoned across all shards/tables
+    n_points: int             # distinct requested gids that had >= 1 live
+    #                           row (the point-count mirror of n_deleted)
     shard_load: np.ndarray    # (S,) live rows remaining per shard
+
+
+@dataclasses.dataclass
+class CompactResult:
+    capacity_before: int      # per-shard append-region rows before
+    capacity_after: int       # per-shard append-region rows after
+    n_live: int               # live rows rewritten (all tables)
+    shard_load: np.ndarray    # (S,) live rows per shard (must be unchanged)
 
 
 @dataclasses.dataclass
@@ -396,6 +411,7 @@ class DistributedLSHIndex:
             packed=alloc((S, capacity, 2), jnp.uint32, 0),
             gid=alloc((S, capacity), jnp.int32, IMAX),
             table=alloc((S, capacity), jnp.int32, 0),
+            key=alloc((S, capacity), jnp.int32, 0),
             valid=alloc((S, capacity), jnp.bool_, False),
         )
         self._shard_load = np.zeros((S,), np.int64)
@@ -416,7 +432,7 @@ class DistributedLSHIndex:
         self.store = StoreState(
             x=pad(st.x, 0.0), packed=pad(st.packed, 0),
             gid=pad(st.gid, IMAX), table=pad(st.table, 0),
-            valid=pad(st.valid, False))
+            key=pad(st.key, 0), valid=pad(st.valid, False))
 
     # ------------------------------------------------------------------
     # Insert: route T rows per point through ONE fused all_to_all into
@@ -428,9 +444,9 @@ class DistributedLSHIndex:
         S, T, d = cfg.n_shards, cfg.n_tables, cfg.d
         axis = self.axis
 
-        def insert_shard(x_loc, gid_loc, valid_loc, sx, sp, sg, stb, sv):
+        def insert_shard(x_loc, gid_loc, valid_loc, sx, sp, sg, stb, sk, sv):
             sx, sp = sx[0], sp[0]
-            sg, stb, sv = sg[0], stb[0], sv[0]
+            sg, stb, sk, sv = sg[0], stb[0], sk[0], sv[0]
             # ---- hashing: T routed copies per point in ONE vmapped pass
             # (params broadcast over the stacked T axis -- trace size is
             # independent of T), point-major row order (table t of point
@@ -438,29 +454,34 @@ class DistributedLSHIndex:
             def hash_table(p):
                 hk = hash_h(p, x_loc, cfg.W)               # (n_loc, k)
                 return (pack_buckets(p, hk),
-                        jnp.mod(shard_key(p, cfg, hk), S).astype(jnp.int32))
-            packs, dests = jax.vmap(hash_table)(sparams)   # (T, n_loc, .)
+                        shard_key(p, cfg, hk).astype(jnp.int32))
+            packs, keys = jax.vmap(hash_table)(sparams)    # (T, n_loc, .)
             packed = jnp.swapaxes(packs, 0, 1).reshape(n_loc * T, 2)
-            dest = jnp.swapaxes(dests, 0, 1).reshape(n_loc * T)
+            rows_k = jnp.swapaxes(keys, 0, 1).reshape(n_loc * T)
+            dest = jnp.mod(rows_k, S).astype(jnp.int32)
             rows_x = jnp.repeat(x_loc, T, axis=0)          # (n_loc*T, d)
             rows_g = jnp.repeat(gid_loc, T)
             rows_t = jnp.tile(jnp.arange(T, dtype=jnp.int32), n_loc)
             rows_v = jnp.repeat(valid_loc, T)
             slot, keep, d_drops = dispatch_slots(dest, rows_v, S, Ci)
 
-            # ---- ONE fused all_to_all: [x | packed | gid | table] as a
-            # single int32 payload (table < 0 marks empty slots) ----
+            # ---- ONE fused all_to_all: [x | packed | gid | table | key]
+            # as a single int32 payload (table < 0 marks empty slots; the
+            # raw Key rides along so the stored row stays re-routable
+            # under a different shard count without re-hashing) ----
             payload = jnp.concatenate([
                 _f2i(rows_x),
                 jax.lax.bitcast_convert_type(packed, jnp.int32),
-                rows_g[:, None], rows_t[:, None]], axis=1)
+                rows_g[:, None], rows_t[:, None],
+                rows_k[:, None]], axis=1)
             nslots = S * Ci
             buf = scatter_rows(slot, keep, payload, nslots, -1)
-            r = _a2a(buf, axis)                            # (S*Ci, d+4)
+            r = _a2a(buf, axis)                            # (S*Ci, d+5)
             rx = _i2f(r[:, :d])
             rp = jax.lax.bitcast_convert_type(r[:, d:d + 2], jnp.uint32)
             rg = r[:, d + 2]
             rt = r[:, d + 3]
+            rk = r[:, d + 4]
             rv = rt >= 0
 
             # ---- append into free slots (tombstones are reused) ----
@@ -483,20 +504,21 @@ class DistributedLSHIndex:
             npk = merge(sp, rp, 0)
             ng = merge(sg, rg, IMAX)
             nt = merge(stb, rt, 0)
+            nk = merge(sk, rk, 0)
             nv = merge(sv, fit, False)
             load = nv.sum().astype(jnp.int32)
             stored = fit.sum().astype(jnp.int32)
             stored_t0 = (fit & (rt == 0)).sum().astype(jnp.int32)
-            return (nx[None], npk[None], ng[None], nt[None], nv[None],
-                    load[None], (d_drops + s_drops)[None], stored[None],
-                    stored_t0[None])
+            return (nx[None], npk[None], ng[None], nt[None], nk[None],
+                    nv[None], load[None], (d_drops + s_drops)[None],
+                    stored[None], stored_t0[None])
 
         spec = P(axis)
         return jax.jit(shard_map(
             insert_shard, mesh=self.mesh,
-            in_specs=(spec,) * 8, out_specs=(spec,) * 9,
+            in_specs=(spec,) * 9, out_specs=(spec,) * 10,
             check_vma=False,   # pallas out_shape has no vma annotation
-        ), donate_argnums=(3, 4, 5, 6, 7))
+        ), donate_argnums=(3, 4, 5, 6, 7, 8))
 
     def insert(self, points: jax.Array,
                gids: Optional[jax.Array] = None) -> InsertResult:
@@ -566,9 +588,10 @@ class DistributedLSHIndex:
         fn = self._insert_fns.get(key)
         if fn is None:
             fn = self._insert_fns[key] = self._make_insert_fn(n_loc, Ci, cap)
-        nx, npk, ng, nt, nv, load, drops, stored, stored_t0 = fn(
-            x, g, valid, st.x, st.packed, st.gid, st.table, st.valid)
-        self.store = StoreState(x=nx, packed=npk, gid=ng, table=nt, valid=nv)
+        nx, npk, ng, nt, nk, nv, load, drops, stored, stored_t0 = fn(
+            x, g, valid, st.x, st.packed, st.gid, st.table, st.key, st.valid)
+        self.store = StoreState(x=nx, packed=npk, gid=ng, table=nt, key=nk,
+                                valid=nv)
         n_drops = int(np.asarray(drops).sum())
         rows_stored = int(np.asarray(stored).sum())
         n_stored = int(np.asarray(stored_t0).sum())
@@ -589,15 +612,19 @@ class DistributedLSHIndex:
 
         def delete_shard(gids_del, sv, sg):
             sv, sg = sv[0], sg[0]
-            hit = jnp.any(sg[:, None] == gids_del[None, :], axis=1) & sv
+            eq = sg[:, None] == gids_del[None, :]          # (cap, n_del)
+            hit = jnp.any(eq, axis=1) & sv
+            # per-requested-gid: did THIS shard hold a live row of it?
+            # (ORed across shards on the host -> distinct-point count)
+            hitg = jnp.any(eq & sv[:, None], axis=0)       # (n_del,)
             nv = sv & ~hit
             return (nv[None], hit.sum().astype(jnp.int32)[None],
-                    nv.sum().astype(jnp.int32)[None])
+                    nv.sum().astype(jnp.int32)[None], hitg[None])
 
         spec = P(axis)
         return jax.jit(shard_map(
             delete_shard, mesh=self.mesh,
-            in_specs=(P(), spec, spec), out_specs=(spec,) * 3,
+            in_specs=(P(), spec, spec), out_specs=(spec,) * 4,
             check_vma=False,
         ), donate_argnums=(1,))
 
@@ -606,6 +633,8 @@ class DistributedLSHIndex:
 
         ``n_deleted`` counts tombstoned ROWS: deleting one point removes
         its copy from every table (n_tables rows when none were dropped).
+        ``n_points`` counts the DISTINCT requested gids that had at least
+        one live row (the point-level mirror of ``n_deleted``).
         """
         if self.store is None:
             raise RuntimeError("insert() or build() first")
@@ -621,12 +650,14 @@ class DistributedLSHIndex:
         if fn is None:
             fn = self._delete_fns[key] = self._make_delete_fn(
                 n_pad, st.capacity)
-        nv, hits, load = fn(jnp.asarray(padded), st.valid, st.gid)
+        nv, hits, load, hitg = fn(jnp.asarray(padded), st.valid, st.gid)
         self.store = dataclasses.replace(st, valid=nv)
         n_deleted = int(np.asarray(hits).sum())
+        anyhit = np.asarray(hitg).any(axis=0)[:len(gids)]
+        n_points = len(np.unique(gids[anyhit]))
         self._shard_load = np.asarray(load).astype(np.int64)
         self._n_live -= n_deleted
-        return DeleteResult(n_deleted=n_deleted,
+        return DeleteResult(n_deleted=n_deleted, n_points=n_points,
                             shard_load=np.asarray(load))
 
     # ------------------------------------------------------------------
@@ -658,7 +689,7 @@ class DistributedLSHIndex:
         st = self.store
         return BuildResult(
             store_x=st.x, store_packed=st.packed, store_gid=st.gid,
-            store_table=st.table, store_valid=st.valid,
+            store_table=st.table, store_key=st.key, store_valid=st.valid,
             data_load=self._shard_load, drops=self._drops)
 
     @property
@@ -670,6 +701,93 @@ class DistributedLSHIndex:
     def shard_load(self) -> np.ndarray:
         """Live stored rows per shard (the paper's load-balance metric)."""
         return np.asarray(self._shard_load)
+
+    # ------------------------------------------------------------------
+    # Live-rows-only serialise / re-route: the shared path behind
+    # compact(), persist.snapshot and the elastic restore
+    # ------------------------------------------------------------------
+    def host_live_rows(self) -> dict:
+        """Pull the LIVE rows of the store to host memory.
+
+        Tombstoned and free slots are dropped, so any store rebuilt from
+        this view is compacted by construction.  Returns a dict of flat
+        ``(n_live, ...)`` numpy arrays: x, packed, gid, table, key.
+        """
+        cfg = self.cfg
+        if self.store is None:
+            return {"x": np.zeros((0, cfg.d), np.float32),
+                    "packed": np.zeros((0, 2), np.uint32),
+                    "gid": np.zeros((0,), np.int32),
+                    "table": np.zeros((0,), np.int32),
+                    "key": np.zeros((0,), np.int32)}
+        st = self.store
+        sel = np.flatnonzero(np.asarray(st.valid).reshape(-1))
+
+        def flat(a):
+            a = np.asarray(a)
+            return a.reshape((-1,) + a.shape[2:])[sel]
+        return {"x": flat(st.x), "packed": flat(st.packed),
+                "gid": flat(st.gid), "table": flat(st.table),
+                "key": flat(st.key)}
+
+    def load_rows(self, rows: dict, capacity: Optional[int] = None
+                  ) -> np.ndarray:
+        """Install host rows into freshly re-routed append regions.
+
+        Each row's destination is ``Key mod n_shards`` -- the stored Key
+        is shard-count-independent, so the SAME call serves in-place
+        compaction (destinations unchanged) and elastic restore onto a
+        different shard count (rows redistribute without re-hashing).
+        Returns the per-shard live-row counts.
+        """
+        cfg = self.cfg
+        S, d = cfg.n_shards, cfg.d
+        key = np.asarray(rows["key"], np.int64)
+        n = int(key.shape[0])
+        dest = np.mod(key, S)
+        counts = np.bincount(dest, minlength=S).astype(np.int64)
+        cap = max(8, int(counts.max(initial=0)), self._store_capacity(n),
+                  int(capacity or 0))
+        order = np.argsort(dest, kind="stable")
+        sdest = dest[order]
+        slot = np.arange(n) - np.searchsorted(sdest, sdest)
+
+        def place(vals, shape, dtype, fill):
+            buf = np.full((S, cap) + shape, fill, dtype)
+            buf[sdest, slot] = np.asarray(vals, dtype)[order]
+            return buf
+        hx = place(rows["x"], (d,), np.float32, 0.0)
+        hp = place(rows["packed"], (2,), np.uint32, 0)
+        hg = place(rows["gid"], (), np.int32, int(IMAX))
+        ht = place(rows["table"], (), np.int32, 0)
+        hk = place(rows["key"], (), np.int32, 0)
+        hv = np.zeros((S, cap), bool)
+        hv[sdest, slot] = True
+
+        sharding = jax.sharding.NamedSharding(self.mesh, P(self.axis))
+        put = lambda a: jax.device_put(jnp.asarray(a), sharding)
+        self.store = StoreState(x=put(hx), packed=put(hp), gid=put(hg),
+                                table=put(ht), key=put(hk), valid=put(hv))
+        self._shard_load = counts
+        self._n_live = n
+        return counts
+
+    def compact(self) -> CompactResult:
+        """Rewrite the append regions live-rows-only (tombstones dropped).
+
+        Rows keep their shard (Key mod S is unchanged), so ``shard_load``
+        is preserved exactly and query results are bit-identical (the
+        top-K merge and emit counts are slot-order-independent); the
+        per-shard capacity shrinks back to the slack policy for the
+        current live-row count.
+        """
+        if self.store is None:
+            raise RuntimeError("insert() or build() first")
+        before = self.store.capacity
+        load = self.load_rows(self.host_live_rows())
+        return CompactResult(capacity_before=before,
+                             capacity_after=self.store.capacity,
+                             n_live=self._n_live, shard_load=load)
 
     # ------------------------------------------------------------------
     # Query

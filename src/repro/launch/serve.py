@@ -14,6 +14,7 @@ import time
 import jax
 import numpy as np
 
+from repro import persist
 from repro.compat import make_mesh
 from repro.configs import get_config
 from repro.core import Scheme
@@ -35,6 +36,14 @@ def main(argv=None):
                     help="fused hash tables (recall lever; same number of"
                          " collectives per step for any value)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="durability: WAL every write there, snapshot the "
+                         "index, and WARM-RESTART from the latest snapshot "
+                         "+ WAL tail when one exists (works across a "
+                         "different device count: elastic re-shard)")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="snapshot (and truncate the WAL) every N query "
+                         "batches; 0 = only the boot snapshot")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -45,14 +54,29 @@ def main(argv=None):
     key = jax.random.PRNGKey(1)
     doc_tokens = jax.random.randint(key, (args.docs, 32), 0, cfg.vocab)
     t0 = time.monotonic()
-    svc = RetrievalService.build(
-        cfg, params, doc_tokens, mesh, r=0.2, L=args.L, k=8, W=0.5,
+    # the service bucket must divide by the mesh's shard count; round the
+    # requested batch size up so any --batch-size serves (pad-to-bucket
+    # absorbs the difference)
+    bucket = -(-args.batch_size // n_dev) * n_dev
+    svc, rr = RetrievalService.recover_or_build(
+        cfg, params, doc_tokens, mesh, snapshot_dir=args.snapshot_dir,
+        bucket_size=bucket, r=0.2, L=args.L, k=8, W=0.5,
         scheme=Scheme(args.scheme), seed=args.seed, n_tables=args.tables)
-    br = svc.index.build_result
-    print(f"[serve] built index: {args.docs} docs, "
-          f"{time.monotonic() - t0:.1f}s, "
-          f"load max/avg={br.data_load.max() / max(br.data_load.mean(), 1):.1f}, "
-          f"drops={br.drops}")
+    if rr is not None:
+        # warm restart: snapshot + WAL tail instead of re-embed + rebuild
+        print(f"[serve] WARM restart from {args.snapshot_dir} "
+              f"(step {rr.step}, {rr.index.n_live} rows, "
+              f"{rr.replayed_inserts + rr.replayed_deletes} WAL batches "
+              f"replayed) in {time.monotonic() - t0:.1f}s")
+    else:
+        br = svc.index.build_result
+        print(f"[serve] built index: {args.docs} docs, "
+              f"{time.monotonic() - t0:.1f}s, "
+              f"load max/avg="
+              f"{br.data_load.max() / max(br.data_load.mean(), 1):.1f}, "
+              f"drops={br.drops}")
+        if args.snapshot_dir:
+            print(f"[serve] boot snapshot -> {args.snapshot_dir}")
 
     lat = []
     for b in range(args.batches):
@@ -62,6 +86,10 @@ def main(argv=None):
         t0 = time.monotonic()
         gids, dists, handles = svc.query(qtok)
         lat.append(time.monotonic() - t0)
+        if (args.snapshot_dir and args.snapshot_every
+                and (b + 1) % args.snapshot_every == 0):
+            persist.snapshot(svc.index, args.snapshot_dir,
+                             wal=svc.service.wal)
     st = svc.service.stats
     assert st.drops == 0
     n = args.batches * args.batch_size

@@ -1,0 +1,16 @@
+"""Durability control plane for the streaming LSH index.
+
+  snapshot -- atomic, compacted-by-construction full-state snapshot
+  restore  -- rebuild a live index from a snapshot, elastically onto any
+              shard count (rows re-route as Key mod S', no re-hashing)
+  recover  -- restore + idempotent WAL-tail replay (crash convergence)
+  WriteAheadLog -- framed, CRC-checked append-before-apply batch log
+"""
+from repro.persist.snapshot import (RecoverResult, has_snapshot, recover,
+                                    restore, snapshot, wal_path)
+from repro.persist.wal import (OP_DELETE, OP_INSERT, WalRecord,
+                               WriteAheadLog, iter_records)
+
+__all__ = ["snapshot", "restore", "recover", "RecoverResult",
+           "has_snapshot", "wal_path", "WriteAheadLog", "WalRecord",
+           "iter_records", "OP_INSERT", "OP_DELETE"]

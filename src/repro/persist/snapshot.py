@@ -1,0 +1,286 @@
+"""Durable snapshots + recovery for the streaming distributed LSH index.
+
+Built on the existing atomic checkpoint layout (``repro.checkpoint``:
+manifest + round-robin shard files + ``LATEST`` pointer, committed by a
+single rename), generalised through ``checkpoint.load`` because a
+snapshot's row count is data-dependent (no fixed template tree).
+
+What a snapshot holds -- LIVE rows only, so every snapshot is compacted
+by construction (tombstones never reach disk):
+
+  * the flat live-row store: x, packed H buckets, gid, table id and the
+    shard-count-independent routing Key per row;
+  * the canonical ``StackedHashParams`` (all T tables) and the stacked
+    per-table offset base keys + the root base key;
+  * the ``LSHConfig`` and the ``_next_gid`` allocator (in the manifest's
+    ``extra``), so post-restore streaming inserts never reuse a gid.
+
+Elastic restore: hash params and the routing Key are independent of the
+shard count, so ``restore(dir, mesh, n_shards=S')`` re-routes every row
+as ``Key mod S'`` WITHOUT re-hashing and must agree bit-for-bit with a
+fresh S'-shard index holding the same live rows (tested).
+
+Recovery: ``recover`` = restore the latest snapshot + replay the WAL
+tail in order.  Replay is idempotent -- an insert batch whose gids are
+already live is skipped (per-gid), so a crash anywhere between WAL
+append, index apply, snapshot commit and WAL truncate converges to the
+uninterrupted store.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint
+from repro.core.config import LSHConfig, Scheme
+from repro.core.hashing import StackedHashParams
+from repro.core.index import DistributedLSHIndex
+from repro.persist.wal import OP_INSERT, WriteAheadLog
+
+_SCHEMA = 1
+_PARAM_FIELDS = ("A", "b", "alpha", "beta", "alpha_cauchy", "pack_mult",
+                 "pack_add")
+
+
+def wal_path(snap_dir: str) -> str:
+    """The WAL file that rides alongside a snapshot directory."""
+    return os.path.join(snap_dir, "wal.log")
+
+
+def has_snapshot(snap_dir: str) -> bool:
+    return checkpoint.latest_step(snap_dir) is not None
+
+
+def _config_to_dict(cfg: LSHConfig) -> dict:
+    d = dataclasses.asdict(cfg)
+    d["scheme"] = cfg.scheme.value
+    return d
+
+
+def _config_from_dict(d: dict) -> LSHConfig:
+    d = dict(d)
+    d["scheme"] = Scheme(d["scheme"])
+    return LSHConfig(**d)
+
+
+def _leaf(by_path: dict, name: str) -> np.ndarray:
+    """Find a flat-dict leaf by its key, robust to the jax version's
+    key-path string form ("['name']" today, bare "name" elsewhere)."""
+    for p, v in by_path.items():
+        if p == name or f"'{name}'" in p:
+            return v
+    raise KeyError(f"snapshot missing leaf {name!r} (have {list(by_path)})")
+
+
+# ---------------------------------------------------------------------------
+# Snapshot
+# ---------------------------------------------------------------------------
+
+def snapshot(index: DistributedLSHIndex, snap_dir: str, *,
+             wal: Optional[WriteAheadLog] = None,
+             step: Optional[int] = None, nshards: int = 4,
+             keep: Optional[int] = 3) -> str:
+    """Write a durable, compacted snapshot of the live index state.
+
+    If a ``wal`` is given it is truncated AFTER the snapshot commits
+    (rename + LATEST pointer), so a crash between the two leaves a WAL
+    tail whose replay is idempotent, never a hole.  The newest ``keep``
+    step directories are retained and older ones garbage-collected
+    (``keep=None`` disables pruning) -- a periodically-snapshotting
+    service must not grow its disk footprint with full store copies.
+    Returns the step directory path.
+    """
+    rows = index.host_live_rows()
+    sp = index.stacked_params
+    tree = {f"rows_{k}": v for k, v in rows.items()}
+    tree.update({f"p_{f}": np.asarray(getattr(sp, f))
+                 for f in _PARAM_FIELDS})
+    tree["k_stacked"] = np.asarray(index.stacked_keys)
+    tree["k_base"] = np.asarray(index.base_key)
+    extra = {
+        "schema": _SCHEMA,
+        "kind": "lsh-index-snapshot",
+        "config": _config_to_dict(index.cfg),
+        "next_gid": int(index._next_gid),
+        "n_live_rows": int(rows["gid"].shape[0]),
+        "k_neighbors": int(index.k_neighbors),
+        # the live store's per-shard reservation: restore defaults to it
+        # (scaled across shard counts) so WAL replay after a crash can't
+        # hit append-region overflow the original stream did not
+        "store_capacity": int(index.store.capacity) if index.store else 0,
+    }
+    if step is None:
+        step = (checkpoint.latest_step(snap_dir) or 0) + 1
+    path = checkpoint.save(snap_dir, step, tree, extra=extra,
+                           nshards=nshards)
+    if wal is not None:
+        wal.truncate()
+    if keep is not None:
+        checkpoint.prune_old(snap_dir, keep=keep)
+    return path
+
+
+# ---------------------------------------------------------------------------
+# Restore (optionally elastic: n_shards != the saved shard count)
+# ---------------------------------------------------------------------------
+
+def restore(snap_dir: str, mesh, *, n_shards: Optional[int] = None,
+            step: Optional[int] = None, axis: str = "shard",
+            use_kernel: bool = False, k_neighbors: Optional[int] = None,
+            slack: float = 4.0, capacity: Optional[int] = None,
+            ) -> DistributedLSHIndex:
+    """Rebuild a live index from the latest (or given) snapshot.
+
+    ``n_shards`` defaults to the mesh's axis size; when it differs from
+    the shard count at save time the stored rows are re-routed host-side
+    as ``Key mod n_shards`` -- no re-hashing, and exact agreement with a
+    fresh index of that shard count (hash params are shard-count-
+    independent).  ``capacity`` pre-reserves per-shard append-region rows
+    for a stream that keeps growing after the restore.
+    """
+    by_path, step, extra = checkpoint.load(snap_dir, step=step)
+    if extra.get("kind") != "lsh-index-snapshot":
+        raise ValueError(f"{snap_dir} step_{step} is not an index snapshot")
+    cfg = _config_from_dict(extra["config"])
+    S_saved = cfg.n_shards
+    S = n_shards if n_shards is not None else mesh.shape[axis]
+    if S != cfg.n_shards:
+        cfg = dataclasses.replace(cfg, n_shards=S)
+    if k_neighbors is None:
+        k_neighbors = int(extra.get("k_neighbors", 1))
+    if capacity is None and extra.get("store_capacity"):
+        # default to the pre-snapshot reservation (total rows preserved
+        # across an elastic re-shard), so post-restore streaming -- WAL
+        # replay in particular -- sees the same headroom it had before
+        capacity = int(math.ceil(
+            int(extra["store_capacity"]) * S_saved / S))
+
+    index = DistributedLSHIndex(cfg, mesh, axis=axis, slack=slack,
+                                use_kernel=use_kernel,
+                                k_neighbors=k_neighbors)
+    # install the SAVED parameters (they equal the freshly sampled ones
+    # for an untouched seed, but survive custom table_params assignments)
+    index.stacked_params = StackedHashParams(
+        *(jnp.asarray(_leaf(by_path, f"p_{f}")) for f in _PARAM_FIELDS))
+    index.params = index.stacked_params.table(0)
+    index.stacked_keys = jnp.asarray(_leaf(by_path, "k_stacked"))
+    index.base_key = jnp.asarray(_leaf(by_path, "k_base"))
+    index._insert_fns.clear()
+    index._query_fns.clear()
+
+    rows = {k: _leaf(by_path, f"rows_{k}")
+            for k in ("x", "packed", "gid", "table", "key")}
+    index.load_rows(rows, capacity=capacity)
+    index._next_gid = int(extra["next_gid"])
+    return index
+
+
+# ---------------------------------------------------------------------------
+# Recover: restore + idempotent WAL replay
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RecoverResult:
+    index: DistributedLSHIndex
+    service: Optional[object]     # ShardedLSHService when requested
+    wal: WriteAheadLog            # open handle, ready for further appends
+    step: int                     # snapshot step restored
+    replayed_inserts: int         # insert batches applied from the tail
+    replayed_deletes: int         # delete batches applied from the tail
+    replayed_points: int          # points inserted by replay
+    skipped_points: int           # points skipped as already live
+    #                               (idempotence: crash between snapshot
+    #                               commit and WAL truncate)
+
+
+def recover(snap_dir: str, mesh, *, n_shards: Optional[int] = None,
+            axis: str = "shard", use_kernel: bool = False,
+            k_neighbors: Optional[int] = None, slack: float = 4.0,
+            capacity: Optional[int] = None,
+            service: Optional[dict] = None) -> RecoverResult:
+    """Restore the latest snapshot, then replay the WAL tail in order.
+
+    Converges to the uninterrupted store from a crash at ANY point: an
+    appended-but-unapplied batch is replayed; an applied-and-snapshotted
+    batch whose truncate was lost is skipped per-gid (inserts) or a
+    no-op (deletes); replay preserves log order, so insert/delete
+    interleavings resolve exactly as they originally did.
+
+    ``service``: optional kwargs dict -- when given, a
+    ``ShardedLSHService`` is built around the restored index with the
+    WAL attached, and the tail is replayed THROUGH it (so ServiceStats
+    counts the replayed writes); the service is returned ready to serve.
+    """
+    index = restore(snap_dir, mesh, n_shards=n_shards, axis=axis,
+                    use_kernel=use_kernel, k_neighbors=k_neighbors,
+                    slack=slack, capacity=capacity)
+    step = checkpoint.latest_step(snap_dir)
+    wal = WriteAheadLog(wal_path(snap_dir))
+
+    svc = None
+    if service is not None:
+        from repro.serving.service import ShardedLSHService
+        svc = ShardedLSHService(index, wal=wal, **service)
+
+    def apply_insert(points, gids):
+        if svc is not None:
+            svc.insert(points, gids=gids)
+        else:
+            index.insert(points, gids=gids)
+
+    def apply_delete(gids):
+        if svc is not None:
+            svc.delete(gids)
+        else:
+            index.delete(gids)
+
+    # live-gid set for idempotent replay: pull ONLY gid+valid back from
+    # the device (host_live_rows would re-fetch the full store, x
+    # included, that restore just pushed)
+    st = index.store
+    gv = np.asarray(st.gid)[np.asarray(st.valid)]
+    live = set(int(g) for g in np.unique(gv))
+    n_ins = n_del = n_pts = n_skip = 0
+    if svc is not None:
+        svc._replaying = True
+    try:
+        for rec in wal.records():
+            if rec.op == OP_INSERT:
+                fresh = np.array([int(g) not in live for g in rec.gids],
+                                 bool)
+                if fresh.any():
+                    apply_insert(rec.points[fresh], rec.gids[fresh])
+                    n_pts += int(fresh.sum())
+                n_skip += int((~fresh).sum())
+                n_ins += 1
+                live.update(int(g) for g in rec.gids)
+                if len(rec.gids):
+                    # even a fully-skipped batch must advance the
+                    # allocator past its gids (no reuse after restart)
+                    index._next_gid = max(index._next_gid,
+                                          int(rec.gids.max()) + 1)
+            else:
+                apply_delete(rec.gids)
+                n_del += 1
+                live.difference_update(int(g) for g in rec.gids)
+    finally:
+        if svc is not None:
+            svc._replaying = False
+    if index._drops:
+        # replay overflowed a capacity the original stream did not (the
+        # restored store shrinks to the slack policy): silently returning
+        # would hand back an index that lost rows while claiming to have
+        # converged -- fail loudly with the remediation instead
+        raise RuntimeError(
+            f"WAL replay dropped {index._drops} rows (append-region "
+            f"overflow on the restored store, capacity "
+            f"{index.store.capacity}/shard); re-run recover() with an "
+            f"explicit capacity= matching the pre-crash reservation")
+    return RecoverResult(index=index, service=svc, wal=wal, step=step,
+                         replayed_inserts=n_ins, replayed_deletes=n_del,
+                         replayed_points=n_pts, skipped_points=n_skip)

@@ -70,6 +70,58 @@ class RetrievalService:
         return cls(cfg=cfg, lsh=lsh, params=params, index=index,
                    service=service)
 
+    @classmethod
+    def recover_or_build(cls, cfg: ModelConfig, params, doc_tokens, mesh, *,
+                         snapshot_dir: "str | None" = None,
+                         bucket_size: int = 64,
+                         max_latency_ms: float = 25.0,
+                         k_neighbors: int = 1, **build_kwargs):
+        """The durable entry point shared by the serve drivers.
+
+        With a ``snapshot_dir`` holding a snapshot: warm-restart (restore
+        + WAL-tail replay through a WAL-attached service) and skip the
+        embed+build entirely.  Otherwise build fresh from ``doc_tokens``
+        and, when a ``snapshot_dir`` is given, attach a WriteAheadLog and
+        write the boot snapshot so the service is recoverable from its
+        first streamed write.  Returns ``(service, RecoverResult|None)``
+        -- the second element is None on a cold build.
+        """
+        from repro import persist
+        if snapshot_dir and persist.has_snapshot(snapshot_dir):
+            rr = persist.recover(
+                snapshot_dir, mesh,
+                service=dict(bucket_size=bucket_size,
+                             max_latency_ms=max_latency_ms,
+                             k_neighbors=k_neighbors))
+            # a warm restart keeps the SNAPSHOT's LSHConfig (stored rows
+            # were hashed under it); surface any build kwarg the caller
+            # changed since, instead of silently serving the old config
+            drift = {
+                kw: (v, getattr(rr.index.cfg, kw))
+                for kw, v in build_kwargs.items()
+                if hasattr(rr.index.cfg, kw)
+                and getattr(rr.index.cfg, kw) != v}
+            if drift:
+                import warnings
+                warnings.warn(
+                    f"warm restart from {snapshot_dir} keeps the "
+                    f"snapshot's LSH config; ignoring changed flags "
+                    f"{ {k: f'{want} (snapshot: {have})' for k, (want, have) in drift.items()} } "
+                    f"-- rebuild without --snapshot-dir (or a fresh dir) "
+                    f"to apply them", stacklevel=2)
+            svc = cls(cfg=cfg, lsh=rr.index.cfg, params=params,
+                      index=rr.index, service=rr.service)
+            return svc, rr
+        svc = cls.build(cfg, params, doc_tokens, mesh,
+                        bucket_size=bucket_size,
+                        max_latency_ms=max_latency_ms,
+                        k_neighbors=k_neighbors, **build_kwargs)
+        if snapshot_dir:
+            svc.service.wal = persist.WriteAheadLog(
+                persist.wal_path(snapshot_dir))
+            persist.snapshot(svc.index, snapshot_dir, wal=svc.service.wal)
+        return svc, None
+
     def insert_docs(self, doc_tokens) -> "np.ndarray":
         """Embed and stream new documents into the index; returns gids."""
         if doc_tokens.shape[0] == 0:

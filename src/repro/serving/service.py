@@ -12,9 +12,14 @@ into that service:
     step is dead after the call, so it is donated (no copy per flush);
   * streaming writes -- ``insert``/``delete`` route straight through the
     index's all_to_all append/tombstone path with capacity accounting;
+  * durability -- with a ``repro.persist.WriteAheadLog`` attached, every
+    insert/delete batch is appended to the log (gids + raw points) BEFORE
+    it is applied, so a crash at any point is recoverable by
+    ``persist.recover`` (snapshot + idempotent WAL-tail replay);
   * accounting -- per-flush latency, occupancy, routed rows and overflow
     drops accumulate into ``ServiceStats`` (the serving-regime view of the
-    paper's network-cost metric).
+    paper's network-cost metric).  WAL-replayed writes go through the
+    same ``insert``/``delete`` entry points, so they are counted too.
 
 The front-end is synchronous and deterministic (no threads): deadlines
 are checked on entry to ``submit``/``submit_batch``, which is the natural
@@ -29,7 +34,8 @@ from typing import List, Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.index import DeleteResult, DistributedLSHIndex, InsertResult
+from repro.core.index import (DeleteResult, DistributedLSHIndex,
+                              InsertResult, check_gid_range)
 
 
 @dataclasses.dataclass
@@ -62,7 +68,11 @@ class ServiceStats:
     inserts: int = 0              # points inserted
     insert_rows: int = 0          # routed rows stored (points x n_tables)
     insert_batches: int = 0
-    deletes: int = 0              # rows tombstoned (points x n_tables)
+    deletes: int = 0              # points deleted (distinct gids hit --
+    #                               mirrors ``inserts``)
+    delete_rows: int = 0          # rows tombstoned (points x n_tables --
+    #                               mirrors ``insert_rows``)
+    delete_batches: int = 0
     drops: int = 0                # capacity overflow anywhere (must stay 0)
     routed_rows: int = 0          # live query rows shipped (network cost,
     #                               summed over the fused tables)
@@ -98,6 +108,8 @@ class ServiceStats:
                 f"manual={self.flush_manual}) occupancy={self.occupancy:.2f} "
                 f"qps={self.queries_per_s:.0f} "
                 f"inserts={self.inserts} ips={self.inserts_per_s:.0f} "
+                f"deletes={self.deletes} "
+                f"(rows={self.delete_rows}) "
                 f"rows/query="
                 f"{self.routed_rows / max(self.queries, 1):.2f} "
                 f"collectives={self.collectives_issued} "
@@ -109,10 +121,16 @@ class ShardedLSHService:
 
     def __init__(self, index: DistributedLSHIndex, bucket_size: int = 64,
                  max_latency_ms: float = 25.0,
-                 k_neighbors: Optional[int] = None):
+                 k_neighbors: Optional[int] = None, wal=None):
         """k_neighbors: top-K returned per query (defaults to the index's
         own k_neighbors); every flush reuses the one K-specialised
-        compiled executable."""
+        compiled executable.
+
+        wal: optional ``repro.persist.WriteAheadLog``.  When attached,
+        every insert/delete batch is appended (gids + raw float32 points)
+        BEFORE it is applied to the index -- the durability contract is
+        "appended == will survive a crash" (``persist.recover`` replays
+        the tail idempotently on top of the latest snapshot)."""
         S = index.cfg.n_shards
         if bucket_size % S:
             raise ValueError(
@@ -126,6 +144,8 @@ class ShardedLSHService:
             raise ValueError(
                 f"k_neighbors={self.k_neighbors} not in [1, 128]")
         self.stats = ServiceStats()
+        self.wal = wal
+        self._replaying = False   # persist.recover: apply without re-append
         self._pending: List[PendingQuery] = []
         self._pending_q: List[np.ndarray] = []
         self._deadline: Optional[float] = None
@@ -236,8 +256,34 @@ class ShardedLSHService:
     # Streaming writes
     # ------------------------------------------------------------------
     def insert(self, points, gids=None) -> InsertResult:
-        """Route a batch of new points into the sharded store."""
+        """Route a batch of new points into the sharded store.
+
+        With a WAL attached the batch (explicit gids + raw points) is
+        appended to the log BEFORE it is applied; auto-assigned gids are
+        materialised from the index's allocator first so the logged batch
+        replays bit-identically.
+        """
         self._check_deadline()   # writes must not starve pending queries
+        if self.wal is not None and not self._replaying:
+            # materialise on host ONLY when logging (the raw points go
+            # into the log); the non-WAL path keeps device arrays as-is
+            points = np.asarray(points, np.float32)
+            if gids is None:
+                n = points.shape[0]
+                gids = np.arange(self.index._next_gid,
+                                 self.index._next_gid + n, dtype=np.int64)
+            gids = np.asarray(gids, np.int64)
+            # validate BEFORE appending: a batch the index would reject
+            # must never reach the log, or every future recover() replays
+            # it into the same exception and the service can't boot
+            if points.ndim != 2 or points.shape[1] != self.index.cfg.d:
+                raise ValueError(f"points must be (n, {self.index.cfg.d}), "
+                                 f"got {points.shape}")
+            if gids.shape[0] != points.shape[0]:
+                raise ValueError(f"gids ({gids.shape[0]}) / points "
+                                 f"({points.shape[0]}) length mismatch")
+            check_gid_range(gids)
+            self.wal.append_insert(gids, points)
         t0 = time.monotonic()
         res = self.index.insert(points, gids=gids)
         self.stats.insert_time_s += time.monotonic() - t0
@@ -248,10 +294,16 @@ class ShardedLSHService:
         return res
 
     def delete(self, gids) -> DeleteResult:
-        """Tombstone rows by global id."""
+        """Tombstone rows by global id (WAL-appended first, like insert)."""
         self._check_deadline()
+        gids = np.asarray(gids, np.int64).reshape(-1)
+        if self.wal is not None and not self._replaying:
+            check_gid_range(gids)   # never log a batch the index rejects
+            self.wal.append_delete(gids)
         res = self.index.delete(gids)
-        self.stats.deletes += res.n_deleted
+        self.stats.deletes += res.n_points
+        self.stats.delete_rows += res.n_deleted
+        self.stats.delete_batches += 1
         return res
 
     # ------------------------------------------------------------------

@@ -206,7 +206,8 @@ for T in (1, 2, 4):
                               st.capacity)
     s = str(jax.make_jaxpr(ins)(
         data[:64, :32], jnp.arange(64, dtype=jnp.int32),
-        jnp.ones(64, bool), st.x, st.packed, st.gid, st.table, st.valid))
+        jnp.ones(64, bool), st.x, st.packed, st.gid, st.table, st.key,
+        st.valid))
     c = collective_counts(s)
     assert c["all_to_all"] == 1, (T, c)
     assert c["all_gather"] == c["psum"] == c["ppermute"] == 0, (T, c)

@@ -204,7 +204,7 @@ def test_query_jaxpr_size_flat_in_tables():
                                   st.capacity)
         s = str(jax.make_jaxpr(inf)(
             data[:64], jnp.arange(64, dtype=jnp.int32), jnp.ones(64, bool),
-            st.x, st.packed, st.gid, st.table, st.valid))
+            st.x, st.packed, st.gid, st.table, st.key, st.valid))
         i_lines[T] = s.count("\\n")
     print("query jaxpr lines:", q_lines, "insert:", i_lines)
     # flat, not linear: T=4 within 25% of T=1 (the old looped path was

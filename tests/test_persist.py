@@ -1,0 +1,437 @@
+"""Durability subsystem tests (subprocess, 8 host devices).
+
+The acceptance contract for snapshots / WAL recovery / elastic restore:
+
+  * snapshot -> restore on the SAME shard count answers queries
+    bit-identically (gids AND distances), preserves shard_load and the
+    gid allocator, and the snapshot holds live rows ONLY (compacted by
+    construction);
+  * compact() shrinks a tombstone-heavy store in place with shard_load
+    and query results unchanged (the open ROADMAP store-compaction item);
+  * restore(n_shards=S') with S' != S agrees EXACTLY with a fresh
+    S'-shard index holding the same live rows, for S' smaller and
+    larger, T in {1, 2}, including post-restore streaming inserts with
+    the restored gid allocator (no gid reuse);
+  * crash recovery: at EVERY kill point between WAL append, index
+    apply, snapshot commit and WAL truncate, ``persist.recover``
+    converges to the store of the uninterrupted prefix (an appended
+    batch is durable; an unappended one never happened);
+  * WAL-replayed writes are counted by ServiceStats (deletes split into
+    points + rows, mirroring inserts).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+pytestmark = pytest.mark.multidevice
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(script: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(_REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    return out.stdout
+
+
+COMMON = """
+import os, tempfile
+import jax, numpy as np
+import jax.numpy as jnp
+from repro.compat import make_mesh
+from repro.core import LSHConfig, Scheme, DistributedLSHIndex
+from repro.data import planted_random
+from repro.serving import ShardedLSHService
+from repro import persist
+
+D = 32
+def make_cfg(S=8, T=1):
+    return LSHConfig(d=D, k=8, W=1.2, r=0.3, c=2.0, L=8, n_shards=S,
+                     scheme=Scheme.LAYERED, seed=0, n_tables=T)
+
+mesh8 = make_mesh((8,), ("shard",))
+data, queries, _ = planted_random(n=768, m=64, d=D, r=0.3, seed=0)
+data, queries = jnp.asarray(data), jnp.asarray(queries)
+
+def live_rows_sorted(idx):
+    rows = idx.host_live_rows()
+    order = np.lexsort((rows["table"], rows["gid"]))
+    return {k: v[order] for k, v in rows.items()}
+
+def assert_same_store(a, b):
+    ra, rb = live_rows_sorted(a), live_rows_sorted(b)
+    for k in ("gid", "table", "key", "packed", "x"):
+        np.testing.assert_array_equal(ra[k], rb[k], err_msg=k)
+    np.testing.assert_array_equal(a.shard_load, b.shard_load)
+    assert a._next_gid == b._next_gid, (a._next_gid, b._next_gid)
+"""
+
+
+def test_snapshot_restore_roundtrip():
+    """Fast-lane roundtrip: snapshot -> restore (same S) is bit-identical,
+    compacted on disk, and the restored allocator continues gid-safely."""
+    out = _run(COMMON + """
+from repro import checkpoint
+cfg = make_cfg(T=2)
+idx = DistributedLSHIndex(cfg, mesh8)
+idx.build(data)
+idx.delete(np.arange(0, 768, 5))
+qr = idx.query(queries, k_neighbors=10)
+
+with tempfile.TemporaryDirectory() as tmp:
+    path = persist.snapshot(idx, tmp)
+    assert os.path.exists(os.path.join(tmp, "LATEST"))
+    # live rows only: the on-disk gid leaf has exactly n_live entries
+    by_path, step, extra = checkpoint.load(tmp)
+    gid_leaf = [v for p, v in by_path.items() if "rows_gid" in p]
+    assert len(gid_leaf) == 1 and gid_leaf[0].shape == (idx.n_live,)
+    assert extra["next_gid"] == idx._next_gid == 768
+
+    r = persist.restore(tmp, mesh8)
+    assert r.cfg == cfg and r.k_neighbors == idx.k_neighbors
+    assert_same_store(r, idx)
+    q2 = r.query(queries, k_neighbors=10)
+    np.testing.assert_array_equal(q2.topk_gid, qr.topk_gid)
+    np.testing.assert_array_equal(q2.topk_dist, qr.topk_dist)
+    np.testing.assert_array_equal(q2.n_within_cr, qr.n_within_cr)
+
+    # the restored allocator must not reuse gids of live rows
+    res = r.insert(data[:16])
+    assert res.gid_start == 768 and res.drops == 0
+    live_gids = set(r.host_live_rows()["gid"].tolist())
+    assert len(live_gids) == len(set(np.asarray(idx.host_live_rows()
+                                     ["gid"]).tolist())) + 16
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_compact_shrinks_tombstone_heavy_store():
+    """ROADMAP store-compaction: tombstones dropped in place, shard_load
+    preserved exactly, queries bit-identical, capacity shrinks."""
+    out = _run(COMMON + """
+cfg = make_cfg(T=2)
+idx = DistributedLSHIndex(cfg, mesh8)
+idx.build(data, capacity=idx._store_capacity(4 * 768 * 2))
+idx.delete(np.arange(0, 768, 2))              # 50% churn
+qr = idx.query(queries, k_neighbors=10)
+load = idx.shard_load.copy()
+cap_before = idx.store.capacity
+
+cr = idx.compact()
+assert cr.capacity_before == cap_before
+assert cr.capacity_after < cap_before, (cr.capacity_after, cap_before)
+assert cr.n_live == idx.n_live
+np.testing.assert_array_equal(cr.shard_load, load)
+np.testing.assert_array_equal(idx.shard_load, load)
+q2 = idx.query(queries, k_neighbors=10)
+np.testing.assert_array_equal(q2.topk_gid, qr.topk_gid)
+np.testing.assert_array_equal(q2.topk_dist, qr.topk_dist)
+np.testing.assert_array_equal(q2.fq, qr.fq)
+
+# the compacted store keeps streaming: inserts reuse the freed regions
+r = idx.insert(data[:64])
+assert r.drops == 0 and r.gid_start == 768
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_service_stats_deletes_and_wal_replay_counting():
+    """Satellite: deletes split into points + rows (mirroring inserts),
+    summary() reports them, and WAL-replayed writes are counted."""
+    out = _run(COMMON + """
+cfg = make_cfg(T=2)
+with tempfile.TemporaryDirectory() as tmp:
+    idx = DistributedLSHIndex(cfg, mesh8)
+    idx.init_store(idx._store_capacity(2 * 768 * 2))
+    wal = persist.WriteAheadLog(persist.wal_path(tmp))
+    svc = ShardedLSHService(idx, bucket_size=64, wal=wal)
+    svc.insert(data[:512])
+    persist.snapshot(idx, tmp, wal=wal)
+    svc.insert(data[512:640])
+    svc.delete([1, 2, 3, 3, 999999])     # 3 distinct live points, T=2 rows
+    assert svc.stats.inserts == 640 and svc.stats.insert_rows == 1280
+    assert svc.stats.deletes == 3, svc.stats.deletes
+    assert svc.stats.delete_rows == 6, svc.stats.delete_rows
+    assert svc.stats.delete_batches == 1
+    assert "deletes=3" in svc.stats.summary()
+    assert svc.stats.drops == 0
+
+    # crash -> recover through a service: replayed writes are counted
+    rr = persist.recover(tmp, mesh8, capacity=idx.store.capacity,
+                         service=dict(bucket_size=64))
+    st = rr.service.stats
+    assert rr.replayed_inserts == 1 and rr.replayed_deletes == 1
+    assert st.inserts == 128 and st.insert_rows == 256
+    assert st.deletes == 3 and st.delete_rows == 6
+    assert rr.wal.n_records == 2          # replay does not re-append
+    assert_same_store(rr.index, idx)
+print("OK")
+""")
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_elastic_restore_matrix():
+    """Nightly matrix: S -> S' for S' in {smaller, larger}, T in {1, 2}.
+    The restored index agrees EXACTLY (gids, distances, shard_load
+    totals) with a fresh S'-shard index holding the same live rows, and
+    post-restore streaming inserts continue without gid reuse."""
+    out = _run(COMMON + """
+mesh4 = make_mesh((4,), ("shard",), devices=jax.devices()[:4])
+meshes = {4: mesh4, 8: mesh8}
+CAP = 4 * 768 * 2
+
+for T in (1, 2):
+    for S, S2 in ((8, 4), (4, 8)):
+        cfg = make_cfg(S=S, T=T)
+        idx = DistributedLSHIndex(cfg, meshes[S])
+        idx.build(data, capacity=CAP)
+        victims = np.arange(0, 768, 7)
+        idx.delete(victims)
+
+        with tempfile.TemporaryDirectory() as tmp:
+            persist.snapshot(idx, tmp)
+            r = persist.restore(tmp, meshes[S2], n_shards=S2, capacity=CAP)
+        assert r.cfg.n_shards == S2 and r.cfg.n_tables == T
+
+        # fresh S'-shard index over the same live points, same gids
+        keep = np.setdiff1d(np.arange(768), victims)
+        fresh = DistributedLSHIndex(make_cfg(S=S2, T=T), meshes[S2])
+        fresh.init_store(CAP)
+        fr = fresh.insert(data[keep], gids=keep)
+        assert fr.drops == 0
+        assert_same_store(r, fresh)
+
+        qa = r.query(queries, k_neighbors=10)
+        qb = fresh.query(queries, k_neighbors=10)
+        np.testing.assert_array_equal(qa.topk_gid, qb.topk_gid)
+        np.testing.assert_array_equal(qa.topk_dist, qb.topk_dist)
+        np.testing.assert_array_equal(qa.fq, qb.fq)
+        assert qa.drops == 0 and qb.drops == 0
+        assert r.shard_load.sum() == fresh.shard_load.sum() == len(keep) * T
+
+        # post-restore streaming: restored allocator, no gid reuse
+        ra = r.insert(data[:32]); rb = fresh.insert(data[:32])
+        assert ra.gid_start == rb.gid_start == 768
+        assert ra.drops == rb.drops == 0
+        qa2 = r.query(queries, k_neighbors=10)
+        qb2 = fresh.query(queries, k_neighbors=10)
+        np.testing.assert_array_equal(qa2.topk_gid, qb2.topk_gid)
+        print(f"elastic OK T={T} {S}->{S2}")
+print("OK")
+""")
+    assert "OK" in out
+
+
+_KILL_COMMON = COMMON + """
+CAP = 4 * 768 * 2
+
+OPS = [
+    ("ins", (0, 256)),
+    ("ins", (256, 384)),
+    ("del", [3, 50, 120, 260]),
+    ("snap", None),
+    ("ins", (384, 512)),
+    ("del", [200, 300, 400]),
+]
+
+def substeps(ops):
+    out = []
+    for i, (kind, arg) in enumerate(ops):
+        if kind == "snap":
+            out += [("snap", i), ("trunc", i)]
+        else:
+            out += [("append", i), ("apply", i)]
+    return out
+
+def run_until(tmp, ops, stop):
+    \"\"\"Execute the harness, stopping after `stop` substeps (a kill).
+    Returns the in-memory index (the 'process' state at the kill).\"\"\"
+    cfg = make_cfg(T=2)
+    idx = DistributedLSHIndex(cfg, mesh8)
+    idx.init_store(CAP)
+    wal = persist.WriteAheadLog(persist.wal_path(tmp))
+    persist.snapshot(idx, tmp, wal=wal)          # boot snapshot
+    next_gid = 0
+    done = 0
+    for kind, i in substeps(ops):
+        if done == stop:
+            break
+        okind, arg = ops[i]
+        if kind == "append":
+            if okind == "ins":
+                lo, hi = arg
+                gids = np.arange(next_gid, next_gid + (hi - lo))
+                next_gid += hi - lo
+                wal.append_insert(gids, np.asarray(data[lo:hi]))
+                pending = (np.asarray(data[lo:hi]), gids)
+            else:
+                wal.append_delete(np.asarray(arg, np.int64))
+                pending = arg
+        elif kind == "apply":
+            if okind == "ins":
+                r = idx.insert(jnp.asarray(pending[0]), gids=pending[1])
+                assert r.drops == 0
+            else:
+                idx.delete(pending)
+        elif kind == "snap":
+            persist.snapshot(idx, tmp)
+        elif kind == "trunc":
+            wal.truncate()
+        done += 1
+    wal.close()
+    return idx
+
+def reference(prefix_ops):
+    cfg = make_cfg(T=2)
+    idx = DistributedLSHIndex(cfg, mesh8)
+    idx.init_store(CAP)
+    next_gid = 0
+    for kind, arg in prefix_ops:
+        if kind == "ins":
+            lo, hi = arg
+            gids = np.arange(next_gid, next_gid + (hi - lo))
+            next_gid += hi - lo
+            r = idx.insert(data[lo:hi], gids=gids)
+            assert r.drops == 0
+        elif kind == "del":
+            idx.delete(arg)
+    return idx
+
+steps = substeps(OPS)
+# durable logical prefix after k substeps: ops whose WAL append ran
+def durable_prefix(k):
+    n = 0
+    for j, (kind, i) in enumerate(steps[:k]):
+        if kind == "append":
+            n = i + 1
+    return [op for op in OPS[:n] if op[0] != "snap"]
+
+refs = {}
+def ref_for(k):
+    prefix = durable_prefix(k)
+    key = len(prefix)
+    if key not in refs:
+        refs[key] = reference(prefix)
+    return refs[key]
+"""
+
+
+def test_kill_point_recovery_single():
+    """Fast-lane crash test: the two canonical kill points -- between
+    WAL append and apply (batch must surface after recovery), and
+    between snapshot commit and WAL truncate (replay must be
+    idempotent)."""
+    out = _run(_KILL_COMMON + """
+# kill between append and apply of op 4 (the post-snapshot insert):
+# substeps: 0 a0 1 p0 2 a1 3 p1 4 a2 5 p2 6 snap 7 trunc 8 a4 9 p4 ...
+for k in (9, 7):
+    with tempfile.TemporaryDirectory() as tmp:
+        run_until(tmp, OPS, stop=k)
+        rr = persist.recover(tmp, mesh8, capacity=CAP)
+        assert_same_store(rr.index, ref_for(k))
+        qa = rr.index.query(queries, k_neighbors=5)
+        qb = ref_for(k).query(queries, k_neighbors=5)
+        np.testing.assert_array_equal(qa.topk_gid, qb.topk_gid)
+        np.testing.assert_array_equal(qa.topk_dist, qb.topk_dist)
+        print(f"kill at {k}: converged")
+
+# idempotence of a lost truncate: snapshot again WITHOUT truncating,
+# recover -> per-gid skip, identical store
+with tempfile.TemporaryDirectory() as tmp:
+    run_until(tmp, OPS, stop=len(steps))
+    rr = persist.recover(tmp, mesh8, capacity=CAP)
+    persist.snapshot(rr.index, tmp)              # truncate "lost"
+    rr2 = persist.recover(tmp, mesh8, capacity=CAP)
+    # 127 of the 128 logged gids are live in the snapshot and skip; gid
+    # 400 was deleted by a LATER record, so ordered replay re-inserts it
+    # and the delete record removes it again -- still convergent
+    assert rr2.skipped_points == 127, rr2.skipped_points
+    assert rr2.replayed_points == 1
+    assert_same_store(rr2.index, rr.index)
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_persist_inprocess_single_shard(tmp_path):
+    """In-process (1 shard, 1 device) exercise of the whole durability
+    surface -- snapshot/restore/recover/compact/WAL-attached service --
+    so the fast lane's coverage actually traces ``repro.persist`` (the
+    multidevice contracts above run in subprocesses coverage can't see)."""
+    import numpy as np
+
+    from repro import persist
+    from repro.compat import make_mesh
+    from repro.core import DistributedLSHIndex, LSHConfig, Scheme
+    from repro.serving import ShardedLSHService
+
+    cfg = LSHConfig(d=8, k=4, W=1.2, r=0.3, c=2.0, L=4, n_shards=1,
+                    scheme=Scheme.LAYERED, seed=0, n_tables=2)
+    mesh = make_mesh((1,), ("shard",))
+    rng = np.random.default_rng(0)
+    data = rng.normal(size=(96, 8)).astype(np.float32)
+    queries = data[:16] + rng.normal(scale=0.05, size=(16, 8)).astype(
+        np.float32)
+
+    idx = DistributedLSHIndex(cfg, mesh)
+    idx.build(data, capacity=idx._store_capacity(4 * 96 * 2))
+    snap = str(tmp_path / "snap")
+    wal = persist.WriteAheadLog(persist.wal_path(snap))
+    svc = ShardedLSHService(idx, bucket_size=8, wal=wal)
+    persist.snapshot(idx, snap, wal=wal)
+    svc.insert(data[:0])                       # empty batch: logged, no-op
+    svc.delete(np.arange(0, 96, 3))
+    assert svc.stats.deletes == 32 and svc.stats.delete_rows == 64
+    qr = idx.query(np.asarray(queries), k_neighbors=4)
+
+    # crash -> recover (index-only path), converge + idempotent re-run
+    for _ in range(2):
+        rr = persist.recover(snap, mesh, capacity=idx.store.capacity)
+        q2 = rr.index.query(np.asarray(queries), k_neighbors=4)
+        np.testing.assert_array_equal(q2.topk_gid, qr.topk_gid)
+        np.testing.assert_array_equal(q2.topk_dist, qr.topk_dist)
+        assert rr.index._next_gid == idx._next_gid
+        rr.wal.close()
+
+    # compact the tombstone-heavy store in place
+    load = idx.shard_load.copy()
+    cr = idx.compact()
+    assert cr.capacity_after < cr.capacity_before
+    np.testing.assert_array_equal(cr.shard_load, load)
+    q3 = idx.query(np.asarray(queries), k_neighbors=4)
+    np.testing.assert_array_equal(q3.topk_gid, qr.topk_gid)
+
+    # restore refuses a non-snapshot directory
+    with pytest.raises(FileNotFoundError):
+        persist.restore(str(tmp_path / "nope"), mesh)
+    wal.close()
+
+
+@pytest.mark.slow
+def test_kill_point_recovery_sweep():
+    """Nightly property sweep: interrupt at EVERY substep boundary
+    (including k=0: nothing but the boot snapshot, and k=len: clean
+    shutdown); recovery converges to the uninterrupted prefix store."""
+    out = _run(_KILL_COMMON + """
+for k in range(len(steps) + 1):
+    with tempfile.TemporaryDirectory() as tmp:
+        run_until(tmp, OPS, stop=k)
+        rr = persist.recover(tmp, mesh8, capacity=CAP)
+        assert rr.index.n_live == ref_for(k).n_live, k
+        assert_same_store(rr.index, ref_for(k))
+        print(f"kill at {k}/{len(steps)}: converged "
+              f"(n_live={rr.index.n_live})")
+print("OK")
+""")
+    assert "OK" in out
