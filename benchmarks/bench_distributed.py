@@ -143,10 +143,10 @@ for T in TABLES:
     trace[f"compile_s_T{{T}}"] = round(t_cold, 3)
     st = idx.store
     qf = idx._make_query_fn(M, st.capacity, idx._query_capacity(M // 8),
-                            False, K)
+                            False, K, st.n_sorted, 4)
     trace[f"jaxpr_lines_T{{T}}"] = str(jax.make_jaxpr(qf)(
         queries, jnp.arange(M, dtype=jnp.int32), st.x, st.packed, st.gid,
-        st.table, st.valid)).count("\\n")
+        st.table, st.valid, st.bucket_start, st.bucket_end)).count("\\n")
     jaxpr_lines = trace[f"jaxpr_lines_T{{T}}"]
     t0 = time.monotonic(); qr = idx.query(queries); t_q = time.monotonic()-t0
     assert br.drops == 0 and qr.drops == 0, (T, br.drops, qr.drops)

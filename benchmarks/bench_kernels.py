@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.types import QueryBatch, StoreView
 
 PEAK = 197e12
 
@@ -44,16 +45,18 @@ def main():
     pb = jax.random.randint(key, (4096, 2), 0, 64, dtype=jnp.int32)
     gid = jnp.arange(4096, dtype=jnp.int32)
     pv = jnp.ones((4096,), jnp.int32)
-    qsq = jnp.sum(q * q, -1)
-    psq = jnp.sum(p * p, -1)
-    f = jax.jit(lambda *a: ref.bucket_search_ref(*a, 2.0, L=8))
-    t = _time(f, q, qsq, qb, probe, p, psq, pb, gid, pv)
+    query = QueryBatch.build(q, qb, probe)
+    store = StoreView.build(p, pb, gid, pv)
+    f = jax.jit(lambda qb_, sv: ref.bucket_search_ref(
+        query=qb_, store=sv, cr2=2.0, L=8))
+    t = _time(f, query, store)
     flops = 2 * 512 * 4096 * 64
     rows.append(("bucket_search_512x4096", t * 1e6, f"tpu_us={flops/PEAK*1e6:.2f}"))
 
     # top-K variant: same scan, K=16 accumulator (the serving path)
-    f = jax.jit(lambda *a: ref.bucket_search_ref(*a, 2.0, L=8, K=16))
-    t = _time(f, q, qsq, qb, probe, p, psq, pb, gid, pv)
+    f = jax.jit(lambda qb_, sv: ref.bucket_search_ref(
+        query=qb_, store=sv, cr2=2.0, L=8, K=16))
+    t = _time(f, query, store)
     rows.append(("bucket_search_topk16_512x4096", t * 1e6,
                  f"tpu_us={flops/PEAK*1e6:.2f}"))
 

@@ -67,8 +67,9 @@ def smoke(json_out: str | None = None):
     scripts, not to validate the figures.  Wall times per bench feed the
     CI regression gate via --json.
     """
-    from benchmarks import (bench_distributed, bench_kernels, bench_mplsh,
-                            bench_persist, bench_schemes, bench_shuffle_vs_L,
+    from benchmarks import (bench_bucket_gather, bench_distributed,
+                            bench_kernels, bench_mplsh, bench_persist,
+                            bench_schemes, bench_shuffle_vs_L,
                             collective_report, paper_common, roofline)
     assert collective_report and roofline  # import-only (need artifacts)
     paper_common.set_scale(n=2000, m=200)
@@ -92,6 +93,10 @@ def smoke(json_out: str | None = None):
     print(f"mplsh,rows={len(mrows)}")
     _section("smoke: kernel micro-benchmarks")
     rec.run("kernel_micro", bench_kernels.main)
+    _section("smoke: CSR bucket-gather vs full scan (rows/probe + ms)")
+    bg = rec.run("bucket_gather", lambda: bench_bucket_gather.main(
+        smoke=True))
+    rec.note("bucket_gather", **bg)
     _section("smoke: distributed index + streaming serve (8 host devices)")
     rec.run("distributed_streaming", lambda: bench_distributed.main(
         smoke=True))
@@ -166,6 +171,15 @@ def main(argv=None):
     _section("kernel micro-benchmarks")
     from benchmarks import bench_kernels
     rec.run("kernel_micro", bench_kernels.main)
+
+    _section("CSR bucket-gather vs full scan (rows/probe + ms)")
+    from benchmarks import bench_bucket_gather
+    bg = rec.run("bucket_gather", bench_bucket_gather.main)
+    rec.note("bucket_gather", **bg)
+    if bg["rows_reduction_n16384"] < 5.0:
+        failures.append(
+            f"bucket_gather: rows-touched reduction "
+            f"{bg['rows_reduction_n16384']}x < 5x at n=16384")
 
     if not args.fast:
         _section("distributed shard_map index (8 host devices, subprocess)")

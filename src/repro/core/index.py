@@ -51,6 +51,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Optional
 
 import jax
@@ -66,7 +67,9 @@ from repro.core.hashing import (HashParams, StackedHashParams, hash_h,
                                 shard_key)
 from repro.core.offsets import (query_offsets, query_offsets_by_table,
                                 stacked_base_keys)
-from repro.core.ref_search import topk_sort_jnp
+from repro.core import store_layout
+from repro.kernels import ops as kops
+from repro.kernels.types import QueryBatch, StoreView
 
 INF = jnp.float32(jnp.finfo(jnp.float32).max)
 IMAX = jnp.int32(jnp.iinfo(jnp.int32).max)
@@ -183,6 +186,19 @@ class StoreState:
     One region hosts the rows of ALL T tables, interleaved: each stored
     row carries the table it belongs to, and the bucket scan only matches
     probes of the same table.
+
+    LSM-style two-region layout: slots ``[0, n_sorted)`` of every shard
+    are the SORTED region -- rows in (table, packed hi, packed lo) lex
+    order with per-row CSR spans in ``bucket_start``/``bucket_end``, the
+    unused slots sentinel-filled (table = IMAX) so the query-side binary
+    search stays valid at full region width.  Slots ``[n_sorted, cap)``
+    are the unsorted insert TAIL, scanned by the full-scan kernel.
+    Inserts only ever write tail slots (tombstoned sorted slots stay in
+    place until the next merge), so the CSR columns are invariant under
+    insert/delete; ``load_rows`` -- and through it ``compact()``, the
+    auto-merge, snapshots and elastic restore -- emits a fully sorted
+    store with an empty tail.  ``n_sorted == 0`` is the legacy unsorted
+    layout (everything is tail).
     """
     x: jax.Array          # (S, cap, d) stored points
     packed: jax.Array     # (S, cap, 2) packed H buckets (uint32)
@@ -193,6 +209,10 @@ class StoreState:
     #                       so compaction / elastic restore re-route rows
     #                       as Key mod S' without re-hashing)
     valid: jax.Array      # (S, cap) bool liveness (False = free/tombstone)
+    bucket_start: jax.Array  # (S, cap) int32 CSR span start of the row's
+    #                          own bucket inside the sorted region
+    bucket_end: jax.Array    # (S, cap) int32 CSR span end (one past last)
+    n_sorted: int = 0     # static region split: rows [0, n_sorted) sorted
 
     @property
     def capacity(self) -> int:
@@ -257,12 +277,22 @@ class QueryResult:
 
     @property
     def best_dist(self) -> np.ndarray:
-        """(m,) nearest returned distance -- the old best-1 view."""
+        """(m,) nearest returned distance -- the old best-1 view.
+
+        .. deprecated:: use ``topk_dist[:, 0]`` instead.
+        """
+        warnings.warn("QueryResult.best_dist is deprecated; use "
+                      "topk_dist[:, 0]", DeprecationWarning, stacklevel=2)
         return self.topk_dist[:, 0]
 
     @property
     def best_gid(self) -> np.ndarray:
-        """(m,) nearest returned gid -- the old best-1 view."""
+        """(m,) nearest returned gid -- the old best-1 view.
+
+        .. deprecated:: use ``topk_gid[:, 0]`` instead.
+        """
+        warnings.warn("QueryResult.best_gid is deprecated; use "
+                      "topk_gid[:, 0]", DeprecationWarning, stacklevel=2)
         return self.topk_gid[:, 0]
 
 
@@ -279,15 +309,24 @@ class DistributedLSHIndex:
 
     def __init__(self, cfg: LSHConfig, mesh: Mesh, axis: str = "shard",
                  slack: float = 4.0, use_kernel: bool = False,
-                 k_neighbors: int = 1):
+                 k_neighbors: int = 1, use_csr: bool = True,
+                 merge_min_rows: int = 1024, merge_frac: float = 0.25):
         """use_kernel=True routes the per-shard bucket search through the
-        Pallas streaming kernel (kernels/bucket_search.py) instead of the
+        Pallas streaming kernels (kernels/bucket_search.py) instead of the
         jnp mask formulation -- identical results (tested), O(R*N) score
         matrix never materialised.
 
         k_neighbors is the default K for ``query``: each query returns its
         K best (dist, gid) pairs within cr, union-merged across shards
-        and tables."""
+        and tables.
+
+        use_csr=False pins the kernel path to the full-scan kernel even
+        on a bucket-sorted store (the comparison baseline; results are
+        bitwise identical either way).  ``merge_min_rows``/``merge_frac``
+        set the LSM merge policy: after an insert, once the unsorted tail
+        holds more than ``merge_min_rows`` live rows AND more than
+        ``merge_frac`` of all live rows, the tail is folded into the
+        sorted region (a ``compact()``-style rewrite)."""
         if mesh.shape[axis] != cfg.n_shards:
             raise ValueError(
                 f"mesh axis {axis}={mesh.shape[axis]} != n_shards={cfg.n_shards}")
@@ -296,6 +335,9 @@ class DistributedLSHIndex:
         self.axis = axis
         self.slack = slack
         self.use_kernel = use_kernel
+        self.use_csr = use_csr
+        self.merge_min_rows = merge_min_rows
+        self.merge_frac = merge_frac
         if not 1 <= k_neighbors <= 128:
             raise ValueError(f"k_neighbors={k_neighbors} not in [1, 128]")
         self.k_neighbors = k_neighbors
@@ -308,59 +350,97 @@ class DistributedLSHIndex:
         # stacked on a leading T axis (sampled from split keys; table 0
         # == the single-table parameter stream, bit-for-bit), plus the
         # matching (T, ...) stack of offset base keys.  The per-table
-        # ``table_params``/``table_keys`` below are compat views.
-        self.stacked_params = sample_stacked_params(kp, cfg)
-        self.params = self.stacked_params.table(0)
-        self.stacked_keys = stacked_base_keys(kq, cfg.n_tables)
+        # ``table_params``/``table_keys`` below are deprecated views.
+        self._stacked_params = sample_stacked_params(kp, cfg)
+        self.params = self._stacked_params.table(0)
+        self._stacked_keys = stacked_base_keys(kq, cfg.n_tables)
         self.base_key = kq
         self.store: Optional[StoreState] = None
         self._shard_load = np.zeros((cfg.n_shards,), np.int64)
         self._drops = 0
         self._n_live = 0
         self._next_gid = 0
+        # store-layout accounting (host-side mirrors of the LSM state)
+        self._sorted_live = 0     # live rows in the sorted region (sum S)
+        self._tail_live = 0       # live rows in the unsorted tail (sum S)
+        self._merges = 0          # tail merges performed (incl. compact)
+        self._max_bucket = 0      # bucket-occupancy stats of the sorted
+        self._mean_bucket = 0.0   # region (sizes the gather window)
 
     # ------------------------------------------------------------------
-    # Per-table parameter views (compat): the stacked form is canonical;
-    # assigning a per-table list restacks it (and invalidates the cached
-    # compiled steps, which close over the parameters).
+    # Hash-parameter surface: the stacked (T, ...) form is canonical.
+    # Assignment is guarded (a populated store was bucketed/routed under
+    # the OLD params -- probing it with new-param keys silently returns
+    # garbage) and invalidates the cached compiled steps, which close
+    # over the parameters.  The per-table ``table_params``/``table_keys``
+    # list views are DEPRECATED compat shims.
     # ------------------------------------------------------------------
     @property
-    def table_params(self) -> list[HashParams]:
-        return self.stacked_params.as_tables()
+    def stacked_params(self) -> StackedHashParams:
+        return self._stacked_params
 
-    @table_params.setter
-    def table_params(self, tables) -> None:
-        tables = list(tables)
-        if len(tables) != self.cfg.n_tables:
+    @stacked_params.setter
+    def stacked_params(self, sparams: StackedHashParams) -> None:
+        if sparams.n_tables != self.cfg.n_tables:
             raise ValueError(f"need {self.cfg.n_tables} tables, "
-                             f"got {len(tables)}")
+                             f"got {sparams.n_tables}")
         if self.store is not None:
-            # stored rows were bucketed/routed under the OLD params;
-            # probing them with new-param keys silently returns garbage
             raise RuntimeError(
                 "cannot replace table params on a populated index -- "
                 "assign before build()/insert()")
-        self.stacked_params = StackedHashParams.stack(tables)
-        self.params = self.stacked_params.table(0)
+        self._stacked_params = sparams
+        self.params = sparams.table(0)
         self._insert_fns.clear()
         self._query_fns.clear()
 
     @property
-    def table_keys(self) -> list[jax.Array]:
-        return [self.stacked_keys[t] for t in range(self.cfg.n_tables)]
+    def stacked_keys(self) -> jax.Array:
+        return self._stacked_keys
 
-    @table_keys.setter
-    def table_keys(self, keys) -> None:
-        keys = list(keys)
-        if len(keys) != self.cfg.n_tables:
+    @stacked_keys.setter
+    def stacked_keys(self, keys: jax.Array) -> None:
+        if keys.shape[0] != self.cfg.n_tables:
             raise ValueError(f"need {self.cfg.n_tables} keys, "
-                             f"got {len(keys)}")
+                             f"got {keys.shape[0]}")
         if self.store is not None:
             raise RuntimeError(
                 "cannot replace offset keys on a populated index -- "
                 "assign before build()/insert()")
-        self.stacked_keys = jnp.stack(keys)
+        self._stacked_keys = keys
         self._query_fns.clear()
+
+    @property
+    def table_params(self) -> list[HashParams]:
+        """.. deprecated:: use ``stacked_params`` (``.as_tables()`` /
+        ``.table(t)`` for per-table views)."""
+        warnings.warn(
+            "DistributedLSHIndex.table_params is deprecated; use "
+            "stacked_params.as_tables()", DeprecationWarning, stacklevel=2)
+        return self.stacked_params.as_tables()
+
+    @table_params.setter
+    def table_params(self, tables) -> None:
+        warnings.warn(
+            "assigning DistributedLSHIndex.table_params is deprecated; "
+            "assign stacked_params = StackedHashParams.stack(tables)",
+            DeprecationWarning, stacklevel=2)
+        self.stacked_params = StackedHashParams.stack(list(tables))
+
+    @property
+    def table_keys(self) -> list[jax.Array]:
+        """.. deprecated:: use ``stacked_keys`` (a (T, 2) key stack)."""
+        warnings.warn(
+            "DistributedLSHIndex.table_keys is deprecated; use "
+            "stacked_keys", DeprecationWarning, stacklevel=2)
+        return [self._stacked_keys[t] for t in range(self.cfg.n_tables)]
+
+    @table_keys.setter
+    def table_keys(self, keys) -> None:
+        warnings.warn(
+            "assigning DistributedLSHIndex.table_keys is deprecated; "
+            "assign stacked_keys = jnp.stack(keys)",
+            DeprecationWarning, stacklevel=2)
+        self.stacked_keys = jnp.stack(list(keys))
 
     # ------------------------------------------------------------------
     # Capacity policy
@@ -396,11 +476,34 @@ class DistributedLSHIndex:
         rows = m_local * self.cfg.pairs_per_query()   # summed over tables
         return max(8, int(math.ceil(rows / S * self.slack)))
 
+    def _gather_window(self, n_expanded: int) -> int:
+        """Static CSR gather window (aligned store tiles per row tile).
+
+        A row tile holds TILE_R expanded probes sorted by span start; its
+        window must cover their start spread (~ TILE_R * n_sorted /
+        n_expanded rows when probes spread evenly over the region) plus
+        the largest bucket.  Doubled for skew -- a too-small window only
+        costs the traced full-scan fallback, never correctness.
+        """
+        st = self.store
+        if st is None or st.n_sorted == 0:
+            return kops.DEFAULT_WINDOW_TILES
+        tr, tn = kops.TILE_R, kops.TILE_N
+        n_tiles = -(-st.n_sorted // tn)
+        spread = tr * st.n_sorted / max(n_expanded, 1)
+        need = math.ceil(2.0 * (spread + self._max_bucket) / tn) + 2
+        return int(min(n_tiles, max(2, need)))
+
     # ------------------------------------------------------------------
     # Store lifecycle
     # ------------------------------------------------------------------
     def init_store(self, capacity: int) -> StoreState:
-        """Allocate empty per-shard append regions (capacity rows/shard)."""
+        """Allocate empty per-shard append regions (capacity rows/shard).
+
+        A fresh store is all tail: n_sorted = 0 until the first
+        ``load_rows`` (compact / restore / merge) establishes the sorted
+        region.
+        """
         cfg = self.cfg
         S = cfg.n_shards
         sharding = jax.sharding.NamedSharding(self.mesh, P(self.axis))
@@ -413,14 +516,25 @@ class DistributedLSHIndex:
             table=alloc((S, capacity), jnp.int32, 0),
             key=alloc((S, capacity), jnp.int32, 0),
             valid=alloc((S, capacity), jnp.bool_, False),
+            bucket_start=alloc((S, capacity), jnp.int32, 0),
+            bucket_end=alloc((S, capacity), jnp.int32, 0),
+            n_sorted=0,
         )
         self._shard_load = np.zeros((S,), np.int64)
         self._drops = 0
         self._n_live = 0
+        self._sorted_live = 0
+        self._tail_live = 0
+        self._max_bucket = 0
+        self._mean_bucket = 0.0
         return self.store
 
     def _grow_store(self, capacity: int) -> None:
-        """Pad the append regions to a larger per-shard capacity."""
+        """Pad the append regions to a larger per-shard capacity.
+
+        Growth only extends the tail, so the sorted region (a prefix of
+        every shard) and its CSR columns are untouched.
+        """
         st = self.store
         extra = capacity - st.capacity
         if extra <= 0:
@@ -432,13 +546,16 @@ class DistributedLSHIndex:
         self.store = StoreState(
             x=pad(st.x, 0.0), packed=pad(st.packed, 0),
             gid=pad(st.gid, IMAX), table=pad(st.table, 0),
-            key=pad(st.key, 0), valid=pad(st.valid, False))
+            key=pad(st.key, 0), valid=pad(st.valid, False),
+            bucket_start=pad(st.bucket_start, 0),
+            bucket_end=pad(st.bucket_end, 0),
+            n_sorted=st.n_sorted)
 
     # ------------------------------------------------------------------
     # Insert: route T rows per point through ONE fused all_to_all into
     # free slots of the table-tagged append regions
     # ------------------------------------------------------------------
-    def _make_insert_fn(self, n_loc: int, Ci: int, cap: int):
+    def _make_insert_fn(self, n_loc: int, Ci: int, cap: int, ns: int):
         cfg = self.cfg
         sparams = self.stacked_params
         S, T, d = cfg.n_shards, cfg.n_tables, cfg.d
@@ -484,9 +601,12 @@ class DistributedLSHIndex:
             rk = r[:, d + 4]
             rv = rt >= 0
 
-            # ---- append into free slots (tombstones are reused) ----
-            n_free = jnp.sum(~sv).astype(jnp.int32)
-            free_order = jnp.argsort(sv)                   # free slots first,
+            # ---- append into free TAIL slots (tail tombstones are
+            # reused; sorted-region slots -- live, tombstoned or sentinel
+            # -- are off limits so the CSR layout stays invariant) ----
+            blocked = sv | (jnp.arange(cap) < ns)
+            n_free = jnp.sum(~blocked).astype(jnp.int32)
+            free_order = jnp.argsort(blocked)              # free slots first,
             rank = jnp.cumsum(rv) - 1                      # in index order
             fit = rv & (rank < n_free)
             s_drops = jnp.sum(rv & ~fit).astype(jnp.int32)
@@ -564,7 +684,12 @@ class DistributedLSHIndex:
         if self.store is None:
             self.init_store(self._store_capacity(n * T))
         else:
-            needed = self._store_capacity(self._n_live + n * T)
+            # the sorted region's slots are unavailable to inserts, so a
+            # sorted store sizes the TAIL for the incoming rows on top of
+            # the fixed region width
+            needed = self.store.n_sorted + self._store_capacity(
+                self._tail_live + n * T) if self.store.n_sorted else \
+                self._store_capacity(self._n_live + n * T)
             if needed > self.store.capacity:
                 # geometric growth: capacity is part of the compiled-fn
                 # cache key, so exact-fit growth would retrace every step
@@ -584,30 +709,45 @@ class DistributedLSHIndex:
         n_loc = n_pad // S
         Ci = self._dispatch_capacity(n_loc * T)
 
-        key = (n_loc, Ci, cap)
+        key = (n_loc, Ci, cap, st.n_sorted)
         fn = self._insert_fns.get(key)
         if fn is None:
-            fn = self._insert_fns[key] = self._make_insert_fn(n_loc, Ci, cap)
+            fn = self._insert_fns[key] = self._make_insert_fn(
+                n_loc, Ci, cap, st.n_sorted)
         nx, npk, ng, nt, nk, nv, load, drops, stored, stored_t0 = fn(
             x, g, valid, st.x, st.packed, st.gid, st.table, st.key, st.valid)
+        # inserts only touch tail slots: the CSR columns and the region
+        # split carry over unchanged
         self.store = StoreState(x=nx, packed=npk, gid=ng, table=nt, key=nk,
-                                valid=nv)
+                                valid=nv, bucket_start=st.bucket_start,
+                                bucket_end=st.bucket_end,
+                                n_sorted=st.n_sorted)
         n_drops = int(np.asarray(drops).sum())
         rows_stored = int(np.asarray(stored).sum())
         n_stored = int(np.asarray(stored_t0).sum())
         self._shard_load = np.asarray(load).astype(np.int64)
         self._drops += n_drops
         self._n_live += rows_stored
-        return InsertResult(shard_load=np.asarray(load), drops=n_drops,
-                            n_inserted=n_stored, rows_stored=rows_stored,
-                            capacity=cap, gid_start=gid_start)
+        self._tail_live += rows_stored
+        result = InsertResult(shard_load=np.asarray(load), drops=n_drops,
+                              n_inserted=n_stored, rows_stored=rows_stored,
+                              capacity=cap, gid_start=gid_start)
+        # LSM churn threshold: fold an eroding tail back into the sorted
+        # region (only once a region exists -- a fresh bulk-built store
+        # stays tail-only until the first compact()/snapshot establishes
+        # one, preserving the legacy layout for pure-streaming flows)
+        if (self.store.n_sorted > 0
+                and self._tail_live > self.merge_min_rows
+                and self._tail_live > self.merge_frac * max(self._n_live, 1)):
+            self.merge_tail()
+        return result
 
     # ------------------------------------------------------------------
     # Delete: tombstone rows by gid (honoured by the bucket scan; the
     # slots become free and are reused by later inserts).  All T table
     # copies of a gid are tombstoned.
     # ------------------------------------------------------------------
-    def _make_delete_fn(self, n_del: int, cap: int):
+    def _make_delete_fn(self, n_del: int, cap: int, ns: int):
         axis = self.axis
 
         def delete_shard(gids_del, sv, sg):
@@ -617,14 +757,17 @@ class DistributedLSHIndex:
             # per-requested-gid: did THIS shard hold a live row of it?
             # (ORed across shards on the host -> distinct-point count)
             hitg = jnp.any(eq & sv[:, None], axis=0)       # (n_del,)
+            # region split of the tombstones (host tail accounting)
+            hit_sorted = (hit & (jnp.arange(cap) < ns)).sum()
             nv = sv & ~hit
             return (nv[None], hit.sum().astype(jnp.int32)[None],
-                    nv.sum().astype(jnp.int32)[None], hitg[None])
+                    nv.sum().astype(jnp.int32)[None], hitg[None],
+                    hit_sorted.astype(jnp.int32)[None])
 
         spec = P(axis)
         return jax.jit(shard_map(
             delete_shard, mesh=self.mesh,
-            in_specs=(P(), spec, spec), out_specs=(spec,) * 4,
+            in_specs=(P(), spec, spec), out_specs=(spec,) * 5,
             check_vma=False,
         ), donate_argnums=(1,))
 
@@ -645,18 +788,22 @@ class DistributedLSHIndex:
         padded = np.full((n_pad,), np.iinfo(np.int32).max, np.int32)
         padded[:len(gids)] = gids
         st = self.store
-        key = (n_pad, st.capacity)
+        key = (n_pad, st.capacity, st.n_sorted)
         fn = self._delete_fns.get(key)
         if fn is None:
             fn = self._delete_fns[key] = self._make_delete_fn(
-                n_pad, st.capacity)
-        nv, hits, load, hitg = fn(jnp.asarray(padded), st.valid, st.gid)
+                n_pad, st.capacity, st.n_sorted)
+        nv, hits, load, hitg, hits_sorted = fn(
+            jnp.asarray(padded), st.valid, st.gid)
         self.store = dataclasses.replace(st, valid=nv)
         n_deleted = int(np.asarray(hits).sum())
         anyhit = np.asarray(hitg).any(axis=0)[:len(gids)]
         n_points = len(np.unique(gids[anyhit]))
         self._shard_load = np.asarray(load).astype(np.int64)
         self._n_live -= n_deleted
+        n_sorted_hits = int(np.asarray(hits_sorted).sum())
+        self._sorted_live -= n_sorted_hits
+        self._tail_live -= n_deleted - n_sorted_hits
         return DeleteResult(n_deleted=n_deleted, n_points=n_points,
                             shard_load=np.asarray(load))
 
@@ -732,44 +879,83 @@ class DistributedLSHIndex:
 
     def load_rows(self, rows: dict, capacity: Optional[int] = None
                   ) -> np.ndarray:
-        """Install host rows into freshly re-routed append regions.
+        """Install host rows into freshly re-routed, BUCKET-SORTED regions.
 
         Each row's destination is ``Key mod n_shards`` -- the stored Key
         is shard-count-independent, so the SAME call serves in-place
         compaction (destinations unchanged) and elastic restore onto a
         different shard count (rows redistribute without re-hashing).
-        Returns the per-shard live-row counts.
+
+        One host lexsort by (dest, table, packed hi, packed lo) both
+        groups rows by shard and puts every shard's rows in CSR lex
+        order, so the rebuilt store is fully sorted with an empty tail:
+        the sorted region spans ``[0, n_sorted)`` on every shard
+        (n_sorted = the fullest shard's row count; shorter shards pad
+        with sentinel rows that sort last), per-row CSR spans come from
+        one run-length pass, and ``capacity - n_sorted`` tail slots
+        remain for streaming inserts.  Returns the per-shard live-row
+        counts.
         """
         cfg = self.cfg
         S, d = cfg.n_shards, cfg.d
         key = np.asarray(rows["key"], np.int64)
+        table = np.asarray(rows["table"], np.int64)
+        packed = np.asarray(rows["packed"], np.uint32).reshape(-1, 2)
         n = int(key.shape[0])
         dest = np.mod(key, S)
         counts = np.bincount(dest, minlength=S).astype(np.int64)
-        cap = max(8, int(counts.max(initial=0)), self._store_capacity(n),
+        cap_sorted = int(counts.max(initial=0))
+        cap = max(8, cap_sorted + 8, self._store_capacity(n),
                   int(capacity or 0))
-        order = np.argsort(dest, kind="stable")
+        order = np.lexsort((packed[:, 1], packed[:, 0], table, dest))
         sdest = dest[order]
-        slot = np.arange(n) - np.searchsorted(sdest, sdest)
+        slot = (np.arange(n) - np.searchsorted(sdest, sdest)).astype(
+            np.int64)
 
         def place(vals, shape, dtype, fill):
             buf = np.full((S, cap) + shape, fill, dtype)
             buf[sdest, slot] = np.asarray(vals, dtype)[order]
             return buf
         hx = place(rows["x"], (d,), np.float32, 0.0)
-        hp = place(rows["packed"], (2,), np.uint32, 0)
+        hp = place(rows["packed"], (2,), np.uint32,
+                   store_layout.SENTINEL_PACKED)
         hg = place(rows["gid"], (), np.int32, int(IMAX))
-        ht = place(rows["table"], (), np.int32, 0)
+        ht = place(rows["table"], (), np.int32, int(IMAX))
         hk = place(rows["key"], (), np.int32, 0)
         hv = np.zeros((S, cap), bool)
         hv[sdest, slot] = True
+        # sentinel rows live only inside the sorted region; the tail
+        # keeps the legacy zero fill (it is scanned, not searched)
+        hp[:, cap_sorted:] = 0
+        ht[:, cap_sorted:] = 0
+
+        # per-shard slot-relative CSR spans (rows of one shard are
+        # contiguous in the lexsorted order, already in CSR lex order)
+        hbs = np.zeros((S, cap), np.int32)
+        hbe = np.zeros((S, cap), np.int32)
+        max_b, sum_b = 0, 0
+        for s in range(S):
+            c = int(counts[s])
+            if c == 0:
+                continue
+            bs, be = store_layout.bucket_spans(ht[s, :c], hp[s, :c])
+            hbs[s, :c], hbe[s, :c] = bs, be
+            mx, mn = store_layout.bucket_stats(bs, be, c)
+            max_b = max(max_b, mx)
+            sum_b += int(round(mn * c))
+        self._max_bucket = max_b
+        self._mean_bucket = sum_b / n if n else 0.0
 
         sharding = jax.sharding.NamedSharding(self.mesh, P(self.axis))
         put = lambda a: jax.device_put(jnp.asarray(a), sharding)
         self.store = StoreState(x=put(hx), packed=put(hp), gid=put(hg),
-                                table=put(ht), key=put(hk), valid=put(hv))
+                                table=put(ht), key=put(hk), valid=put(hv),
+                                bucket_start=put(hbs), bucket_end=put(hbe),
+                                n_sorted=cap_sorted)
         self._shard_load = counts
         self._n_live = n
+        self._sorted_live = n
+        self._tail_live = 0
         return counts
 
     def compact(self) -> CompactResult:
@@ -785,15 +971,38 @@ class DistributedLSHIndex:
             raise RuntimeError("insert() or build() first")
         before = self.store.capacity
         load = self.load_rows(self.host_live_rows())
+        self._merges += 1
         return CompactResult(capacity_before=before,
                              capacity_after=self.store.capacity,
                              n_live=self._n_live, shard_load=load)
+
+    def merge_tail(self) -> CompactResult:
+        """Fold the unsorted insert tail into the sorted region (the LSM
+        merge step).  Identical to ``compact()`` -- a live-rows-only
+        rewrite through ``load_rows`` always emits a fully sorted store
+        -- but named for the auto-merge call site so profiles and logs
+        show merges as merges."""
+        return self.compact()
+
+    @property
+    def layout(self) -> dict:
+        """Store-layout health: region sizes and merge count (the
+        numbers ``ServiceStats.summary`` surfaces for operators)."""
+        st = self.store
+        return {
+            "n_sorted": 0 if st is None else st.n_sorted,
+            "sorted_rows": self._sorted_live,
+            "tail_rows": self._tail_live,
+            "merges": self._merges,
+            "max_bucket": self._max_bucket,
+            "mean_bucket": self._mean_bucket,
+        }
 
     # ------------------------------------------------------------------
     # Query
     # ------------------------------------------------------------------
     def _make_query_fn(self, m: int, cap: int, Cq: int, donate: bool,
-                       K: int):
+                       K: int, ns: int, G: int):
         cfg = self.cfg
         sparams, skeys = self.stacked_params, self.stacked_keys
         S, L, T, d = cfg.n_shards, cfg.L, cfg.n_tables, cfg.d
@@ -801,6 +1010,7 @@ class DistributedLSHIndex:
         m_loc = m // S
         cr2 = jnp.float32((cfg.c * cfg.r) ** 2)
         use_kernel = self.use_kernel
+        use_csr = self.use_csr
 
         def keys_of(p, offs):
             """One table's offsets (L, d) -> (Key, packedH) per offset."""
@@ -818,11 +1028,12 @@ class DistributedLSHIndex:
             return ~jnp.any(eq & earlier, axis=-1)      # (L,)
 
         def query_shard(q_loc, qid_loc, store_x, store_packed, store_gid,
-                        store_table, store_valid):
+                        store_table, store_valid, store_bs, store_be):
             # stores arrive with a leading per-shard block dim of 1
             store_x, store_packed = store_x[0], store_packed[0]
             store_gid, store_valid = store_gid[0], store_valid[0]
             store_table = store_table[0]
+            store_bs, store_be = store_bs[0], store_be[0]
             me = jax.lax.axis_index(axis)
 
             # ---- route: each local query's T x L offsets hashed in ONE
@@ -887,38 +1098,28 @@ class DistributedLSHIndex:
             probe = mine & firstocc                            # (R, L)
 
             # ---- bucket search (Fig 3.2 Reduce body), local top-K,
-            # stored rows only answer probes of their own table ----
-            if use_kernel:
-                from repro.kernels import ops as kops
-                qb = jax.lax.bitcast_convert_type(
-                    rpacked, jnp.int32).reshape(rpacked.shape[0], -1)
-                pb = jax.lax.bitcast_convert_type(store_packed, jnp.int32)
-                row_d, row_g, row_emit = kops.bucket_search(
-                    rq, jnp.sum(rq ** 2, -1), qb,
-                    probe.astype(jnp.int32),
-                    store_x, jnp.sum(store_x ** 2, -1), pb,
-                    store_gid, store_valid.astype(jnp.int32),
-                    float(np.float32((cfg.c * cfg.r) ** 2)), L=L, k=K,
-                    qtable=rtab_safe, ptable=store_table)
-            else:
-                # match[rrow, srow] = stored bucket equals one of my probes
-                match = jnp.any(
-                    (rpacked[:, :, None, 0] == store_packed[None, None, :, 0])
-                    & (rpacked[:, :, None, 1] == store_packed[None, None, :, 1])
-                    & probe[:, :, None], axis=1)               # (R, Ns)
-                match = match & store_valid[None, :]
-                match = match & (rtab_safe[:, None] == store_table[None, :])
-                d2 = (jnp.sum(rq ** 2, -1)[:, None]
-                      + jnp.sum(store_x ** 2, -1)[None, :]
-                      - 2.0 * rq @ store_x.T)                  # (R, Ns)
-                d2 = jnp.maximum(d2, 0.0)
-                hit = match & (d2 <= cr2)
-                d2m = jnp.where(hit, d2, INF)
-                gidm = jnp.where(
-                    hit, jnp.broadcast_to(store_gid[None, :], d2m.shape),
-                    IMAX)
-                row_d, row_g = topk_sort_jnp(d2m, gidm, K, pad_d=INF)
-                row_emit = hit.sum(axis=1).astype(jnp.int32)
+            # stored rows only answer probes of their own table.  One
+            # typed call surface for all three paths: the Pallas CSR
+            # gather (sorted store), the Pallas full scan, and the jnp
+            # oracle (use_kernel=False; always a full scan -- it is the
+            # XLA lowering for sharded dry runs) ----
+            qbatch = QueryBatch(
+                q=rq, qsq=jnp.sum(rq ** 2, -1),
+                buckets=jax.lax.bitcast_convert_type(
+                    rpacked, jnp.int32).reshape(rpacked.shape[0], -1),
+                probe=probe.astype(jnp.int32), table=rtab_safe)
+            sview = StoreView(
+                points=store_x, psq=jnp.sum(store_x ** 2, -1),
+                buckets=jax.lax.bitcast_convert_type(
+                    store_packed, jnp.int32),
+                gid=store_gid, valid=store_valid.astype(jnp.int32),
+                table=store_table, bucket_start=store_bs,
+                bucket_end=store_be, n_sorted=ns)
+            row_d, row_g, row_emit = kops.bucket_search(
+                query=qbatch, store=sview,
+                cr2=float(np.float32((cfg.c * cfg.r) ** 2)), L=L, k=K,
+                use_kernel=use_kernel, force_full_scan=not use_csr,
+                window_tiles=G)
 
             # ---- local union across tables: this shard holds at most
             # one live row per (qid, table), so scatter per-row top-Ks
@@ -957,7 +1158,7 @@ class DistributedLSHIndex:
         spec = P(axis)
         return jax.jit(shard_map(
             query_shard, mesh=self.mesh,
-            in_specs=(spec,) * 7, out_specs=(spec,) * 6,
+            in_specs=(spec,) * 9, out_specs=(spec,) * 6,
             check_vma=False,   # pallas out_shape has no vma annotation
         ), donate_argnums=(0,) if donate else ())
 
@@ -985,15 +1186,18 @@ class DistributedLSHIndex:
         m_loc = m // S
         Cq = self._query_capacity(m_loc)
         st = self.store
+        G = self._gather_window(S * Cq * cfg.L)
 
-        key = (m, st.capacity, Cq, donate, K)
+        key = (m, st.capacity, Cq, donate, K, st.n_sorted, G,
+               self.use_csr)
         fn = self._query_fns.get(key)
         if fn is None:
             fn = self._query_fns[key] = self._make_query_fn(
-                m, st.capacity, Cq, donate, K)
+                m, st.capacity, Cq, donate, K, st.n_sorted, G)
         qids = jnp.arange(m, dtype=jnp.int32)
         gtopd, gtopg, gemit, fq, load, drops = fn(
-            queries, qids, st.x, st.packed, st.gid, st.table, st.valid)
+            queries, qids, st.x, st.packed, st.gid, st.table, st.valid,
+            st.bucket_start, st.bucket_end)
         # each shard returned exactly its own qids' results (the routed
         # return path); the sharded outputs concatenate to (m, K)
         gtopd = np.asarray(gtopd)

@@ -5,10 +5,18 @@
   flash_attention -- online-softmax attention (LM serving prefill)
   ssd_scan        -- Mamba-2 SSD chunked scan (SSM archs)
 
+``bucket_search`` takes the typed keyword-only call surface: a
+``QueryBatch`` (probe state per received row) and a ``StoreView`` (one
+shard's rows + optional CSR bucket layout); on a bucket-sorted store it
+dispatches to the CSR bucket-gather kernel instead of the full scan.
+
 Each kernel: <name>.py (pallas_call + BlockSpec), validated in
 interpret=True mode against the pure-jnp oracle in ref.py; ops.py holds
 the padded/jit'd public wrappers.
 """
-from repro.kernels.ops import bucket_search, flash_attention, lsh_hash, ssd_scan
+from repro.kernels.ops import (bucket_search, csr_probe_spans,
+                               flash_attention, lsh_hash, ssd_scan)
+from repro.kernels.types import QueryBatch, StoreView
 
-__all__ = ["bucket_search", "flash_attention", "lsh_hash", "ssd_scan"]
+__all__ = ["QueryBatch", "StoreView", "bucket_search", "csr_probe_spans",
+           "flash_attention", "lsh_hash", "ssd_scan"]

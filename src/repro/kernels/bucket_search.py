@@ -1,12 +1,25 @@
-"""Pallas TPU kernel: streaming bucket-constrained top-K neighbour scan.
+"""Pallas TPU kernels: streaming bucket-constrained top-K neighbour scan.
 
 The Reduce/UDF inner loop of the paper (Fig 3.2): for every received query
 row, find the K closest stored points among those whose packed H-bucket
 matches one of the query's *probed* offset buckets, subject to the
 distance threshold (cr)^2.
 
-Fusion story: the (TILE_R, TILE_N) pairwise-distance tile comes off the
-MXU (via -2 Q P^T plus norm epilogue), and the bucket-equality mask, the
+Two kernels share one accumulator design:
+
+  * ``bucket_search_pallas`` -- the FULL SCAN: every (row tile, point
+    tile) pair is visited and the bucket-equality mask selects matches.
+    O(N) point tiles per row tile, but layout-agnostic: it is the path
+    for unsorted stores and for the insert tail.
+  * ``bucket_gather_pallas`` -- the CSR GATHER: the store is sorted by
+    (table, bucket) and each expanded (query row, probe) carries its
+    bucket's CSR span [start, end).  A scalar-prefetched per-row-tile
+    base index steers the point-tile BlockSpec, so only the G aligned
+    store tiles covering the tile's spans are streamed -- O(bucket
+    occupancy) work per probe instead of O(N_shard).
+
+Fusion story (both kernels): the (TILE_R, TILE_N) pairwise-distance tile
+comes off the MXU (via -2 Q P^T plus norm epilogue), and the mask, the
 threshold filter and the running top-K reduction all happen in the same
 VMEM residency -- the O(R*N) distance matrix never reaches HBM.  The
 accumulator is a per-row (dist^2, gid) list of length K kept sorted by
@@ -14,6 +27,11 @@ accumulator is a per-row (dist^2, gid) list of length K kept sorted by
 is merged in with K extract-min passes over the tile's masked distances
 concatenated with the running K (an insertion merge -- O(K*(TILE_N+K))
 VPU work per tile, no sort network needed).
+
+Because both kernels feed the SAME (TILE_R, d) x (TILE_N, d) dot_general
+with identical aligned point tiles, and the extract-min merge is exact
+selection over lex (dist^2, gid) order (visit-order independent), the
+gather kernel's results are bitwise identical to the full scan's.
 
 Grid: (row tiles, point tiles); the point axis is minor-most, so the
 output blocks for a row tile are revisited across point tiles and act as
@@ -26,11 +44,45 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.types import QueryBatch, StoreView
 
 TILE_R = 128
 TILE_N = 128
 F32_MAX = float(jnp.finfo(jnp.float32).max)
 IMAX = int(jnp.iinfo(jnp.int32).max)
+
+
+def _merge_topk_tile(topd_ref, topg_ref, d2m, gidm, *, K: int, init):
+    """Merge one tile's masked (dist, gid) pairs into the running sorted
+    top-K accumulator blocks (shared by both kernels).
+
+    Candidate pool = this tile's masked pairs + the running K.  gids are
+    unique across the pool (stored rows are unique and the running K came
+    from earlier, disjoint tiles); empty slots are the (F32_MAX, IMAX)
+    sentinel, which extract-min leaves in place, so fewer-than-K hits pad
+    the tail with sentinels.
+    """
+    @pl.when(init)
+    def _init():
+        topd_ref[...] = jnp.full(topd_ref.shape, F32_MAX, jnp.float32)
+        topg_ref[...] = jnp.full(topg_ref.shape, IMAX, jnp.int32)
+
+    cand_d = jnp.concatenate([d2m, topd_ref[...]], axis=1)  # (TR, TN+K)
+    cand_g = jnp.concatenate([gidm, topg_ref[...]], axis=1)
+    out_d, out_g = [], []
+    for _ in range(K):
+        bd = jnp.min(cand_d, axis=1)                          # (TR,)
+        bg = jnp.min(jnp.where(cand_d <= bd[:, None], cand_g, IMAX),
+                     axis=1)                                  # lex tie-break
+        out_d.append(bd)
+        out_g.append(bg)
+        taken = (cand_d == bd[:, None]) & (cand_g == bg[:, None])
+        cand_d = jnp.where(taken, F32_MAX, cand_d)
+        cand_g = jnp.where(taken, IMAX, cand_g)
+    topd_ref[...] = jnp.stack(out_d, axis=1)                  # (TR, K)
+    topg_ref[...] = jnp.stack(out_g, axis=1)
 
 
 def _bucket_search_kernel(q_ref, qsq_ref, qb_ref, probe_ref, qtab_ref,
@@ -66,36 +118,13 @@ def _bucket_search_kernel(q_ref, qsq_ref, qb_ref, probe_ref, qtab_ref,
     d2m = jnp.where(hit, d2, F32_MAX)             # (TR, TN)
     gid = gid_ref[...]                            # (TN,)
     gidm = jnp.where(hit, gid[None, :], IMAX)     # non-hits carry no gid
-    tile_cnt = jnp.sum(hit, axis=1).astype(jnp.int32)
 
     @pl.when(j == 0)
-    def _init():
-        topd_ref[...] = jnp.full(topd_ref.shape, F32_MAX, jnp.float32)
-        topg_ref[...] = jnp.full(topg_ref.shape, IMAX, jnp.int32)
+    def _():
         cnt_ref[...] = jnp.zeros(cnt_ref.shape, jnp.int32)
+    cnt_ref[...] = cnt_ref[...] + jnp.sum(hit, axis=1).astype(jnp.int32)
 
-    cnt_ref[...] = cnt_ref[...] + tile_cnt
-
-    # ---- merge the tile into the running sorted top-K accumulator ----
-    # Candidate pool = this tile's masked (dist, gid) pairs + the running
-    # K.  gids are unique across the pool (stored rows are unique and the
-    # running K came from earlier, disjoint tiles); empty slots are the
-    # (F32_MAX, IMAX) sentinel, which extract-min leaves in place, so
-    # fewer-than-K hits pad the tail with sentinels.
-    cand_d = jnp.concatenate([d2m, topd_ref[...]], axis=1)  # (TR, TN+K)
-    cand_g = jnp.concatenate([gidm, topg_ref[...]], axis=1)
-    out_d, out_g = [], []
-    for _ in range(K):
-        bd = jnp.min(cand_d, axis=1)                          # (TR,)
-        bg = jnp.min(jnp.where(cand_d <= bd[:, None], cand_g, IMAX),
-                     axis=1)                                  # lex tie-break
-        out_d.append(bd)
-        out_g.append(bg)
-        taken = (cand_d == bd[:, None]) & (cand_g == bg[:, None])
-        cand_d = jnp.where(taken, F32_MAX, cand_d)
-        cand_g = jnp.where(taken, IMAX, cand_g)
-    topd_ref[...] = jnp.stack(out_d, axis=1)                  # (TR, K)
-    topg_ref[...] = jnp.stack(out_g, axis=1)
+    _merge_topk_tile(topd_ref, topg_ref, d2m, gidm, K=K, init=j == 0)
 
 
 def vmem_bytes_per_step(d: int, L: int, K: int) -> int:
@@ -122,21 +151,31 @@ def vmem_bytes_per_step(d: int, L: int, K: int) -> int:
     return in_bytes + out_bytes + dist_tile
 
 
-@functools.partial(jax.jit, static_argnames=("L", "K", "interpret"))
-def bucket_search_pallas(q, qsq, qbuckets, probe, qtable, p, psq, pbuckets,
-                         gid, pvalid, ptable, cr2, *, L: int, K: int = 1,
-                         interpret: bool = False):
-    """Streaming masked top-K NN scan.
+def gather_vmem_bytes_per_step(d: int, K: int) -> int:
+    """VMEM per bucket-gather grid step: independent of N_shard AND of L
+    (the probe expansion happens on the row axis, not in the block)."""
+    in_bytes = (TILE_R * d * 4          # expanded q tile
+                + TILE_R * 4 * 3        # eqsq, span start, span end
+                + TILE_N * d * 4        # gathered p tile
+                + TILE_N * 4 * 3        # psq, gid, pvalid
+                + 4)                    # cr2 scalar
+    out_bytes = TILE_R * K * 4 * 2 + TILE_R * 4
+    dist_tile = TILE_R * TILE_N * 4
+    return in_bytes + out_bytes + dist_tile
 
-    Args:
-      q: (R, d) query rows;          qsq: (R,) squared norms.
-      qbuckets: (R, 2*L) int32 -- packed (hi, lo) per probed offset bucket.
-      probe: (R, L) int32 -- 1 where this offset bucket should be searched.
-      qtable: (R,) int32 table id each query row probes (0 for T=1).
-      p: (N, d) stored points;       psq: (N,) squared norms.
-      pbuckets: (N, 2) int32 packed bucket per stored point.
-      gid: (N,) int32 global ids;    pvalid: (N,) int32 0/1.
-      ptable: (N,) int32 table id each stored row belongs to.
+
+@functools.partial(jax.jit, static_argnames=("L", "K", "interpret"))
+def bucket_search_pallas(*, query: QueryBatch, store: StoreView, cr2,
+                         L: int, K: int = 1, interpret: bool = False):
+    """Streaming masked top-K NN scan over EVERY stored row (full scan).
+
+    Args (all keyword-only):
+      query: QueryBatch with R rows -- q (R, d), qsq (R,), buckets
+        (R, 2*L) int32 packed (hi, lo) per probed offset bucket, probe
+        (R, L) int32 0/1, table (R,) int32.
+      store: StoreView with N rows -- points (N, d), psq (N,), buckets
+        (N, 2) int32, gid (N,), valid (N,) int32 0/1, table (N,).  The
+        CSR fields are ignored here (this is the layout-agnostic path).
       cr2: scalar threshold (c*r)^2.
       K: neighbours to keep per row (static).
     Returns:
@@ -147,8 +186,8 @@ def bucket_search_pallas(q, qsq, qbuckets, probe, qtable, p, psq, pbuckets,
     old single-best contract exactly; a stored row only matches probes of
     its own table.
     """
-    R, d = q.shape
-    N = p.shape[0]
+    R, d = query.q.shape
+    N = store.points.shape[0]
     assert R % TILE_R == 0 and N % TILE_N == 0, (R, N)
     assert 1 <= K <= TILE_N, K
     grid = (R // TILE_R, N // TILE_N)
@@ -181,5 +220,112 @@ def bucket_search_pallas(q, qsq, qbuckets, probe, qtable, p, psq, pbuckets,
             jax.ShapeDtypeStruct((R,), jnp.int32),
         ],
         interpret=interpret,
-    )(q, qsq, qbuckets, probe, qtable, p, psq, pbuckets, gid, pvalid,
-      ptable, jnp.full((1, 1), cr2, jnp.float32))
+    )(query.q, query.qsq, query.buckets, query.probe, query.table,
+      store.points, store.psq, store.buckets, store.gid, store.valid,
+      store.table, jnp.full((1, 1), cr2, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# CSR bucket gather: sorted-region scan that touches only each probe's
+# own bucket row range
+# ---------------------------------------------------------------------------
+
+def _bucket_gather_kernel(base_ref, q_ref, qsq_ref, s_ref, e_ref,
+                          p_ref, psq_ref, gid_ref, pvalid_ref, cr2_ref,
+                          topd_ref, topg_ref, cnt_ref, *, K: int):
+    i, g = pl.program_id(0), pl.program_id(1)
+
+    q = q_ref[...].astype(jnp.float32)            # (TR, d)
+    p = p_ref[...].astype(jnp.float32)            # (TN, d)
+    d2 = (qsq_ref[...].reshape(-1, 1) + psq_ref[...].reshape(1, -1)
+          - 2.0 * jax.lax.dot_general(
+              q, p, (((1,), (1,)), ((), ())),
+              preferred_element_type=jnp.float32))  # (TR, TN)
+    d2 = jnp.maximum(d2, 0.0)
+
+    # span mask: absolute store-row index of each column in this gathered
+    # tile, against the expanded row's CSR span [start, end).  Rows in the
+    # span share the probe's exact (table, bucket) triple by construction
+    # of the sort + binary search, so no bucket/table compare is needed --
+    # only liveness (tombstones stay in place until the next merge).
+    col0 = (base_ref[i] + g) * TILE_N
+    cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (1, TILE_N), 1)
+    span = ((cols >= s_ref[...].reshape(-1, 1))
+            & (cols < e_ref[...].reshape(-1, 1)))        # (TR, TN)
+    hit = span & (pvalid_ref[...].reshape(1, -1) > 0) \
+        & (d2 <= cr2_ref[0, 0])
+    d2m = jnp.where(hit, d2, F32_MAX)
+    gidm = jnp.where(hit, gid_ref[...][None, :], IMAX)
+
+    @pl.when(g == 0)
+    def _():
+        cnt_ref[...] = jnp.zeros(cnt_ref.shape, jnp.int32)
+    cnt_ref[...] = cnt_ref[...] + jnp.sum(hit, axis=1).astype(jnp.int32)
+
+    _merge_topk_tile(topd_ref, topg_ref, d2m, gidm, K=K, init=g == 0)
+
+
+@functools.partial(jax.jit, static_argnames=("K", "G", "interpret"))
+def bucket_gather_pallas(base, q, qsq, start, end, p, psq, gid, pvalid,
+                         cr2, *, K: int, G: int, interpret: bool = False):
+    """CSR bucket-gather top-K scan over a bucket-sorted point region.
+
+    One input row = one EXPANDED (query row, probe) pair, pre-sorted by
+    span start so that the spans of a 128-row tile cluster into a small
+    window of aligned point tiles.  ``base`` (E/TILE_R,) int32 is scalar-
+    prefetched and steers the point-tile BlockSpec: grid step (i, g)
+    streams aligned store tile ``base[i] + g``, so a row tile touches
+    exactly G point tiles regardless of N.  The caller guarantees
+    ``base[i] + G <= N // TILE_N`` and that every live span of tile i
+    fits inside its window (checked outside; on overflow the caller runs
+    the full scan instead -- correctness never depends on G).
+
+    Args:
+      base: (E // TILE_R,) int32 first store tile per row tile.
+      q: (E, d) expanded query rows;  qsq: (E,) squared norms.
+      start/end: (E,) int32 CSR span of each expanded probe (start == end
+        for dead probes and padding rows).
+      p/psq/gid/pvalid: the (N, ...) SORTED point region (padded rows
+        must carry pvalid == 0).
+      cr2: scalar threshold (c*r)^2.
+      K: neighbours per expanded row (static);  G: window tiles (static).
+    Returns (topd (E, K), topg (E, K), cnt (E,)) with the same sentinel
+    and lex-order contract as ``bucket_search_pallas``.
+    """
+    E, d = q.shape
+    N = p.shape[0]
+    assert E % TILE_R == 0 and N % TILE_N == 0, (E, N)
+    assert 1 <= K <= TILE_N, K
+    assert 1 <= G <= N // TILE_N, (G, N)
+    kernel = functools.partial(_bucket_gather_kernel, K=K)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(E // TILE_R, G),
+        in_specs=[
+            pl.BlockSpec((TILE_R, d), lambda i, g, b: (i, 0)),
+            pl.BlockSpec((TILE_R,), lambda i, g, b: (i,)),
+            pl.BlockSpec((TILE_R,), lambda i, g, b: (i,)),
+            pl.BlockSpec((TILE_R,), lambda i, g, b: (i,)),
+            pl.BlockSpec((TILE_N, d), lambda i, g, b: (b[i] + g, 0)),
+            pl.BlockSpec((TILE_N,), lambda i, g, b: (b[i] + g,)),
+            pl.BlockSpec((TILE_N,), lambda i, g, b: (b[i] + g,)),
+            pl.BlockSpec((TILE_N,), lambda i, g, b: (b[i] + g,)),
+            pl.BlockSpec((1, 1), lambda i, g, b: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE_R, K), lambda i, g, b: (i, 0)),
+            pl.BlockSpec((TILE_R, K), lambda i, g, b: (i, 0)),
+            pl.BlockSpec((TILE_R,), lambda i, g, b: (i,)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((E, K), jnp.float32),
+            jax.ShapeDtypeStruct((E, K), jnp.int32),
+            jax.ShapeDtypeStruct((E,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(base, q, qsq, start, end, p, psq, gid, pvalid,
+      jnp.full((1, 1), cr2, jnp.float32))

@@ -22,29 +22,29 @@ def lsh_hash_ref(x: jax.Array, a: jax.Array, b: jax.Array, *,
     return jnp.floor(proj).astype(jnp.int32)
 
 
-def bucket_search_ref(q, qsq, qbuckets, probe, p, psq, pbuckets, gid,
-                      pvalid, cr2, *, L: int, K: int = 1,
-                      qtable=None, ptable=None):
-    """Masked top-K NN scan; see bucket_search_pallas for the contract.
+def bucket_search_ref(*, query, store, cr2, L: int, K: int = 1):
+    """Masked top-K NN full scan; see bucket_search_pallas for the
+    contract.  Takes the same ``QueryBatch``/``StoreView`` dataclasses as
+    the kernels (keyword-only); the StoreView's CSR fields are ignored --
+    this oracle is the layout-agnostic ground truth that both the full
+    scan and the CSR gather must reproduce.
 
     Returns (topd (R, K), topg (R, K), cnt (R,)): per-row K best
     (dist^2, gid) pairs in (dist^2, gid) lex order, sentinel-padded with
-    (F32_MAX, IMAX) when fewer than K points hit.  With qtable/ptable set
-    (multi-table fusion), a stored row only matches probes of its own
-    table; None means everything is table 0.
+    (F32_MAX, IMAX) when fewer than K points hit.  A stored row only
+    matches probes of its own table (multi-table fusion).
     """
-    d2 = qsq[:, None] + psq[None, :] - 2.0 * q @ p.T
+    q, p = query.q, store.points
+    d2 = query.qsq[:, None] + store.psq[None, :] - 2.0 * q @ p.T
     d2 = jnp.maximum(d2, 0.0)
-    qb = qbuckets.reshape(q.shape[0], L, 2)
+    qb = query.buckets.reshape(q.shape[0], L, 2)
+    pbuckets, probe, gid = store.buckets, query.probe, store.gid
     match = jnp.any(
         (qb[:, :, 0, None] == pbuckets[None, None, :, 0])
         & (qb[:, :, 1, None] == pbuckets[None, None, :, 1])
         & (probe[:, :, None] > 0), axis=1)
-    match = match & (pvalid[None, :] > 0)
-    if qtable is not None or ptable is not None:
-        qt = jnp.zeros(q.shape[:1], jnp.int32) if qtable is None else qtable
-        pt = jnp.zeros(p.shape[:1], jnp.int32) if ptable is None else ptable
-        match = match & (qt[:, None] == pt[None, :])
+    match = match & (store.valid[None, :] > 0)
+    match = match & (query.table[:, None] == store.table[None, :])
     hit = match & (d2 <= cr2)
     d2m = jnp.where(hit, d2, F32_MAX)
     gidm = jnp.where(hit, jnp.broadcast_to(gid[None, :], d2m.shape), IMAX)

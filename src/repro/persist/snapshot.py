@@ -40,9 +40,16 @@ from repro import checkpoint
 from repro.core.config import LSHConfig, Scheme
 from repro.core.hashing import StackedHashParams
 from repro.core.index import DistributedLSHIndex
+from repro.core import store_layout
 from repro.persist.wal import OP_INSERT, WriteAheadLog
 
-_SCHEMA = 1
+# schema 2: rows are persisted in CSR lex (table, packed hi, packed lo)
+# order with their bucket offsets (rows_bucket_start/rows_bucket_end) and
+# a "layout" manifest entry; schema-1 snapshots (slot order, no offsets)
+# restore identically -- load_rows re-sorts and re-derives the CSR either
+# way, the persisted offsets are the on-disk index contract for external
+# readers
+_SCHEMA = 2
 _PARAM_FIELDS = ("A", "b", "alpha", "beta", "alpha_cauchy", "pack_mult",
                  "pack_add")
 
@@ -96,8 +103,15 @@ def snapshot(index: DistributedLSHIndex, snap_dir: str, *,
     Returns the step directory path.
     """
     rows = index.host_live_rows()
+    # persist the sorted layout: rows go to disk in CSR lex order with
+    # their bucket offsets, so a snapshot IS a sorted store image
+    order = store_layout.sort_order(rows["table"], rows["packed"])
+    rows = {k: v[order] for k, v in rows.items()}
+    bs, be = store_layout.bucket_spans(rows["table"], rows["packed"])
     sp = index.stacked_params
     tree = {f"rows_{k}": v for k, v in rows.items()}
+    tree["rows_bucket_start"] = bs
+    tree["rows_bucket_end"] = be
     tree.update({f"p_{f}": np.asarray(getattr(sp, f))
                  for f in _PARAM_FIELDS})
     tree["k_stacked"] = np.asarray(index.stacked_keys)
@@ -113,6 +127,9 @@ def snapshot(index: DistributedLSHIndex, snap_dir: str, *,
         # (scaled across shard counts) so WAL replay after a crash can't
         # hit append-region overflow the original stream did not
         "store_capacity": int(index.store.capacity) if index.store else 0,
+        # sort state: rows_* are in CSR lex order, offsets are on disk;
+        # merges carries the LSM counter across restarts
+        "layout": {"sorted": True, "merges": int(index._merges)},
     }
     if step is None:
         step = (checkpoint.latest_step(snap_dir) or 0) + 1
@@ -177,6 +194,7 @@ def restore(snap_dir: str, mesh, *, n_shards: Optional[int] = None,
             for k in ("x", "packed", "gid", "table", "key")}
     index.load_rows(rows, capacity=capacity)
     index._next_gid = int(extra["next_gid"])
+    index._merges = int(extra.get("layout", {}).get("merges", 0))
     return index
 
 

@@ -78,6 +78,12 @@ class ServiceStats:
     #                               summed over the fused tables)
     query_time_s: float = 0.0     # wall time inside flushed query steps
     insert_time_s: float = 0.0
+    # store-layout health (mirrored from the index after every write):
+    # a growing tail erodes the CSR win -- each query full-scans it --
+    # until the next merge folds it back into the sorted region
+    store_sorted_rows: int = 0    # live rows in the bucket-sorted region
+    store_tail_rows: int = 0      # live rows in the unsorted insert tail
+    store_merges: int = 0         # LSM tail merges (incl. compactions)
 
     @property
     def collectives_issued(self) -> int:
@@ -113,6 +119,9 @@ class ServiceStats:
                 f"rows/query="
                 f"{self.routed_rows / max(self.queries, 1):.2f} "
                 f"collectives={self.collectives_issued} "
+                f"store=sorted:{self.store_sorted_rows}"
+                f"+tail:{self.store_tail_rows} "
+                f"merges={self.store_merges} "
                 f"drops={self.drops}")
 
 
@@ -291,6 +300,7 @@ class ShardedLSHService:
         self.stats.insert_rows += res.rows_stored
         self.stats.insert_batches += 1
         self.stats.drops += res.drops
+        self._sync_layout_stats()
         return res
 
     def delete(self, gids) -> DeleteResult:
@@ -304,7 +314,14 @@ class ShardedLSHService:
         self.stats.deletes += res.n_points
         self.stats.delete_rows += res.n_deleted
         self.stats.delete_batches += 1
+        self._sync_layout_stats()
         return res
+
+    def _sync_layout_stats(self) -> None:
+        layout = self.index.layout
+        self.stats.store_sorted_rows = layout["sorted_rows"]
+        self.stats.store_tail_rows = layout["tail_rows"]
+        self.stats.store_merges = layout["merges"]
 
     # ------------------------------------------------------------------
     def shard_load(self) -> np.ndarray:

@@ -79,15 +79,15 @@ cfg, idx = make(Scheme.LAYERED, L=32)
 idx.build(data)
 qr = idx.query(queries)
 rep = simulate(cfg, data, queries, compute_recall=True)
-found = np.isfinite(qr.best_dist)
+found = np.isfinite(qr.topk_dist[:, 0])
 # (a) all returned distances within cr and correct vs the actual points
 for i in np.nonzero(found)[0][:50]:
-    gid = qr.best_gid[i]
+    gid = qr.topk_gid[i, 0]
     d_true = np.linalg.norm(np.asarray(queries)[i] - np.asarray(data)[gid])
     assert d_true <= cfg.c * cfg.r + 1e-5
-    assert abs(d_true - qr.best_dist[i]) < 1e-3
+    assert abs(d_true - qr.topk_dist[i, 0]) < 1e-3
 # (b) distributed recall equals simulator recall
-dist_recall = float(((qr.best_dist <= cfg.r)).mean())
+dist_recall = float(((qr.topk_dist[:, 0] <= cfg.r)).mean())
 assert abs(dist_recall - rep.recall) < 0.02, (dist_recall, rep.recall)
 assert qr.n_within_cr.sum() == rep.results_emitted
 print("OK", dist_recall)
@@ -120,9 +120,9 @@ mesh = make_mesh((8,), ("shard",))
 idx_k = DistributedLSHIndex(cfg, mesh, use_kernel=True)
 idx_k.build(data)
 r_k = idx_k.query(queries)
-np.testing.assert_allclose(r_k.best_dist, r_jnp.best_dist,
+np.testing.assert_allclose(r_k.topk_dist[:, 0], r_jnp.topk_dist[:, 0],
                            rtol=1e-5, atol=1e-5)
-assert (r_k.best_gid == r_jnp.best_gid).mean() > 0.999  # fp ties only
+assert (r_k.topk_gid[:, 0] == r_jnp.topk_gid[:, 0]).mean() > 0.999  # fp ties only
 np.testing.assert_array_equal(r_k.n_within_cr, r_jnp.n_within_cr)
 print("OK")
 """)
@@ -137,8 +137,8 @@ cfg1, idx1 = make(Scheme.LAYERED, seed=1, L=16)
 cfg2, idx2 = make(Scheme.LAYERED, seed=2, L=16)
 idx1.build(data); idx2.build(data)
 r1 = idx1.query(queries); r2 = idx2.query(queries)
-rec1 = float((r1.best_dist <= cfg1.r).mean())
-both = np.minimum(r1.best_dist, r2.best_dist)
+rec1 = float((r1.topk_dist[:, 0] <= cfg1.r).mean())
+both = np.minimum(r1.topk_dist[:, 0], r2.topk_dist[:, 0])
 rec_union = float((both <= cfg1.r).mean())
 assert rec_union >= rec1
 print("OK", rec1, rec_union)

@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
+from repro.kernels.types import QueryBatch, StoreView
 
 
 def _rand(key, shape, dtype=jnp.float32, scale=1.0):
@@ -64,13 +65,29 @@ def _bucket_case(key, R, N, d, L, frac_match=0.2):
     return q, qsq, qbuckets, probe, p, psq, pbuckets, gid, pvalid
 
 
+def _qs(args, qtable=None, ptable=None):
+    """Wrap a `_bucket_case` 9-tuple in the typed kernel API."""
+    q, qsq, qb, probe, p, psq, pb, gid, pv = args
+    query = QueryBatch(
+        q=q, qsq=qsq, buckets=qb, probe=probe,
+        table=(qtable if qtable is not None
+               else jnp.zeros((q.shape[0],), jnp.int32)))
+    store = StoreView(
+        points=p, psq=psq, buckets=pb, gid=gid, valid=pv,
+        table=(ptable if ptable is not None
+               else jnp.zeros((p.shape[0],), jnp.int32)))
+    return query, store
+
+
 @pytest.mark.parametrize("R,N,d,L", [(128, 128, 32, 4), (128, 256, 64, 8),
                                      (100, 200, 16, 2), (256, 384, 48, 16)])
 def test_bucket_search_matches_ref(R, N, d, L):
-    args = _bucket_case(jax.random.PRNGKey(R + N), R, N, d, L)
+    query, store = _qs(_bucket_case(jax.random.PRNGKey(R + N), R, N, d, L))
     cr2 = 2.5
-    best_k, gid_k, cnt_k = ops.bucket_search(*args, cr2, L=L)
-    best_r, gid_r, cnt_r = ref.bucket_search_ref(*args, cr2, L=L)
+    best_k, gid_k, cnt_k = ops.bucket_search(query=query, store=store,
+                                             cr2=cr2, L=L)
+    best_r, gid_r, cnt_r = ref.bucket_search_ref(query=query, store=store,
+                                                 cr2=cr2, L=L)
     np.testing.assert_allclose(np.asarray(best_k), np.asarray(best_r),
                                rtol=1e-5, atol=1e-5)
     np.testing.assert_array_equal(np.asarray(cnt_k), np.asarray(cnt_r))
@@ -83,11 +100,13 @@ def test_bucket_search_matches_ref(R, N, d, L):
 def test_bucket_search_topk_matches_ref(K, R, N, d, L):
     """Top-K parity across point tiles, including rows with fewer than K
     hits (sentinel-padded tails must agree too)."""
-    args = _bucket_case(jax.random.PRNGKey(K * 7 + R), R, N, d, L,
-                        frac_match=0.5)
+    query, store = _qs(_bucket_case(jax.random.PRNGKey(K * 7 + R), R, N,
+                                    d, L, frac_match=0.5))
     cr2 = 40.0  # wide threshold so most rows have many hits
-    td_k, tg_k, c_k = ops.bucket_search(*args, cr2, L=L, k=K)
-    td_r, tg_r, c_r = ref.bucket_search_ref(*args, cr2, L=L, K=K)
+    td_k, tg_k, c_k = ops.bucket_search(query=query, store=store, cr2=cr2,
+                                        L=L, k=K)
+    td_r, tg_r, c_r = ref.bucket_search_ref(query=query, store=store,
+                                            cr2=cr2, L=L, K=K)
     assert td_k.shape == (R, K) and tg_k.shape == (R, K)
     np.testing.assert_allclose(np.asarray(td_k), np.asarray(td_r),
                                rtol=1e-5, atol=1e-5)
@@ -114,10 +133,12 @@ def test_bucket_search_topk_ties():
     probe = jnp.ones((R, L), jnp.int32)
     pv = jnp.ones((N,), jnp.int32)
     gid = jnp.arange(N, dtype=jnp.int32)[::-1].copy()   # descending
-    args = (q, jnp.sum(q * q, -1), qb, probe, p, jnp.sum(p * p, -1), pb,
-            gid, pv)
-    td_k, tg_k, cnt = ops.bucket_search(*args, 100.0, L=L, k=K)
-    td_r, tg_r, _ = ref.bucket_search_ref(*args, 100.0, L=L, K=K)
+    query, store = _qs((q, jnp.sum(q * q, -1), qb, probe, p,
+                        jnp.sum(p * p, -1), pb, gid, pv))
+    td_k, tg_k, cnt = ops.bucket_search(query=query, store=store, cr2=100.0,
+                                        L=L, k=K)
+    td_r, tg_r, _ = ref.bucket_search_ref(query=query, store=store,
+                                          cr2=100.0, L=L, K=K)
     np.testing.assert_array_equal(np.asarray(tg_k), np.asarray(tg_r))
     np.testing.assert_array_equal(np.asarray(tg_k)[0], np.arange(K))
     assert np.all(np.asarray(cnt) == N)
@@ -135,10 +156,11 @@ def test_bucket_search_table_mask(T):
     qtable = jax.random.randint(ks[0], (R,), 0, T, dtype=jnp.int32)
     ptable = jax.random.randint(ks[1], (N,), 0, T, dtype=jnp.int32)
     cr2 = 40.0
-    td_k, tg_k, c_k = ops.bucket_search(*args, cr2, L=L, k=4,
-                                        qtable=qtable, ptable=ptable)
-    td_r, tg_r, c_r = ref.bucket_search_ref(*args, cr2, L=L, K=4,
-                                            qtable=qtable, ptable=ptable)
+    query, store = _qs(args, qtable=qtable, ptable=ptable)
+    td_k, tg_k, c_k = ops.bucket_search(query=query, store=store, cr2=cr2,
+                                        L=L, k=4)
+    td_r, tg_r, c_r = ref.bucket_search_ref(query=query, store=store,
+                                            cr2=cr2, L=L, K=4)
     np.testing.assert_allclose(np.asarray(td_k), np.asarray(td_r),
                                rtol=1e-5, atol=1e-5)
     np.testing.assert_array_equal(np.asarray(tg_k), np.asarray(tg_r))
@@ -146,10 +168,10 @@ def test_bucket_search_table_mask(T):
     # per-table oracle: zero out the OTHER tables' stored rows via pvalid
     q, qsq, qb, probe, p, psq, pb, gid, pvalid = args
     for t in range(T):
-        pv_t = pvalid * (np.asarray(ptable) == t)
-        td_t, tg_t, c_t = ref.bucket_search_ref(
-            q, qsq, qb, probe, p, psq, pb, gid, jnp.asarray(pv_t), cr2,
-            L=L, K=4)
+        pv_t = jnp.asarray(pvalid * (np.asarray(ptable) == t))
+        query0, store_t = _qs((q, qsq, qb, probe, p, psq, pb, gid, pv_t))
+        td_t, tg_t, c_t = ref.bucket_search_ref(query=query0, store=store_t,
+                                                cr2=cr2, L=L, K=4)
         rows = np.asarray(qtable) == t
         np.testing.assert_array_equal(np.asarray(tg_k)[rows],
                                       np.asarray(tg_t)[rows])
@@ -161,7 +183,9 @@ def test_bucket_search_no_matches():
     R, N, d, L = 128, 128, 8, 2
     args = list(_bucket_case(jax.random.PRNGKey(0), R, N, d, L))
     args[3] = jnp.zeros_like(args[3])  # probe nothing
-    best, gid, cnt = ops.bucket_search(*args, 1.0, L=L, k=4)
+    query, store = _qs(tuple(args))
+    best, gid, cnt = ops.bucket_search(query=query, store=store, cr2=1.0,
+                                       L=L, k=4)
     assert np.all(np.asarray(best) == np.float32(np.finfo(np.float32).max))
     assert np.all(np.asarray(gid) == np.iinfo(np.int32).max)
     assert np.all(np.asarray(cnt) == 0)
@@ -196,14 +220,16 @@ def test_bucket_search_no_rxn_buffer():
                 yield from shapes(sub)
 
     R, N = 256, 1024
-    args = _bucket_case(jax.random.PRNGKey(1), R, N, d, L)
+    query, store = _qs(_bucket_case(jax.random.PRNGKey(1), R, N, d, L))
     jaxpr = jax.make_jaxpr(
-        lambda *a: ops.bucket_search(*a, 2.5, L=L, k=K))(*args)
+        lambda qb, sv: ops.bucket_search(query=qb, store=sv, cr2=2.5,
+                                         L=L, k=K))(query, store)
     assert (R, N) not in set(shapes(jaxpr.jaxpr))
     # positive control: the same walk DOES see the dense (R, N) matrix in
     # the jnp oracle, so the assertion above has teeth
     jaxpr_ref = jax.make_jaxpr(
-        lambda *a: ref.bucket_search_ref(*a, 2.5, L=L, K=K))(*args)
+        lambda qb, sv: ref.bucket_search_ref(query=qb, store=sv, cr2=2.5,
+                                             L=L, K=K))(query, store)
     assert (R, N) in set(shapes(jaxpr_ref.jaxpr))
 
 

@@ -41,6 +41,7 @@ import jax, numpy as np
 import jax.numpy as jnp
 from repro.compat import make_mesh
 from repro.core import LSHConfig, Scheme, DistributedLSHIndex
+from repro.core.hashing import StackedHashParams
 from repro.data import planted_random
 
 def cfg_t(T, **kw):
@@ -145,9 +146,9 @@ np.testing.assert_array_equal(qr.topk_gid, refg)
 per_table = []
 for t in range(T):
     idx = DistributedLSHIndex(cfg_t(1), mesh, k_neighbors=K)
-    idx.table_params = [fused.table_params[t]]
-    idx.params = idx.table_params[0]
-    idx.table_keys = [fused.table_keys[t]]
+    idx.stacked_params = StackedHashParams.stack(
+        [fused.stacked_params.table(t)])
+    idx.stacked_keys = fused.stacked_keys[t][None]
     idx.build(data)
     rt = idx.query(queries)
     assert rt.drops == 0
@@ -203,7 +204,7 @@ for T in (1, 2, 4):
     st = idx.store
     n_loc = 64 // 8
     ins = idx._make_insert_fn(n_loc, idx._dispatch_capacity(n_loc * T),
-                              st.capacity)
+                              st.capacity, st.n_sorted)
     s = str(jax.make_jaxpr(ins)(
         data[:64, :32], jnp.arange(64, dtype=jnp.int32),
         jnp.ones(64, bool), st.x, st.packed, st.gid, st.table, st.key,
@@ -213,10 +214,11 @@ for T in (1, 2, 4):
     assert c["all_gather"] == c["psum"] == c["ppermute"] == 0, (T, c)
 
     qf = idx._make_query_fn(64, st.capacity, idx._query_capacity(8),
-                            False, 4)
+                            False, 4, st.n_sorted, 4)
     s = str(jax.make_jaxpr(qf)(
         queries[:64, :32], jnp.arange(64, dtype=jnp.int32),
-        st.x, st.packed, st.gid, st.table, st.valid))
+        st.x, st.packed, st.gid, st.table, st.valid,
+        st.bucket_start, st.bucket_end))
     c = collective_counts(s)
     assert c["all_to_all"] == 2, (T, c)
     assert c["all_gather"] == c["psum"] == c["ppermute"] == 0, (T, c)
@@ -249,7 +251,7 @@ np.testing.assert_array_equal(qr2.n_within_cr, qr.n_within_cr)
 np.testing.assert_array_equal(idx2._shard_load, br.data_load)
 
 # delete removes BOTH table copies
-victims = np.unique(qr.best_gid[np.isfinite(qr.best_dist)])[:10]
+victims = np.unique(qr.topk_gid[:, 0][np.isfinite(qr.topk_dist[:, 0])])[:10]
 dr = idx.delete(victims)
 assert dr.n_deleted == 2 * len(victims), dr.n_deleted
 qr3 = idx.query(queries)

@@ -194,14 +194,15 @@ def test_query_jaxpr_size_flat_in_tables():
         idx.build(data)
         st = idx.store
         qf = idx._make_query_fn(64, st.capacity, idx._query_capacity(8),
-                                False, 4)
+                                False, 4, st.n_sorted, 4)
         s = str(jax.make_jaxpr(qf)(
             queries[:64], jnp.arange(64, dtype=jnp.int32),
-            st.x, st.packed, st.gid, st.table, st.valid))
+            st.x, st.packed, st.gid, st.table, st.valid,
+            st.bucket_start, st.bucket_end))
         q_lines[T] = s.count("\\n")
         n_loc = 64 // 8
         inf = idx._make_insert_fn(n_loc, idx._dispatch_capacity(n_loc * T),
-                                  st.capacity)
+                                  st.capacity, st.n_sorted)
         s = str(jax.make_jaxpr(inf)(
             data[:64], jnp.arange(64, dtype=jnp.int32), jnp.ones(64, bool),
             st.x, st.packed, st.gid, st.table, st.key, st.valid))
@@ -329,12 +330,24 @@ def test_param_assignment_rejected_on_populated_store():
     ones would silently probe stale buckets -- assignment must raise once
     the store exists (and still work before build/insert)."""
     idx = _tiny_index()
-    idx.table_params = idx.table_params          # pre-store: allowed
-    idx.table_keys = idx.table_keys
+    # canonical stacked accessors: no warning, pre-store assignment allowed
+    idx.stacked_params = idx.stacked_params
+    idx.stacked_keys = idx.stacked_keys
+    # deprecated per-table shims still delegate (and warn)
+    with pytest.warns(DeprecationWarning):
+        idx.table_params = idx.table_params      # pre-store: allowed
+    with pytest.warns(DeprecationWarning):
+        idx.table_keys = idx.table_keys
     idx.insert(np.zeros((4, 8), np.float32))
     with pytest.raises(RuntimeError, match="populated"):
-        idx.table_params = idx.table_params
+        idx.stacked_params = idx.stacked_params
     with pytest.raises(RuntimeError, match="populated"):
+        idx.stacked_keys = idx.stacked_keys
+    with pytest.warns(DeprecationWarning), \
+            pytest.raises(RuntimeError, match="populated"):
+        idx.table_params = idx.table_params
+    with pytest.warns(DeprecationWarning), \
+            pytest.raises(RuntimeError, match="populated"):
         idx.table_keys = idx.table_keys
 
 

@@ -61,8 +61,8 @@ qr2 = idx2.query(queries)
 assert br.drops == 0 and qr.drops == 0
 assert ir.drops == 0 and qr2.drops == 0
 assert ir.n_inserted == 1024
-np.testing.assert_array_equal(qr2.best_gid, qr.best_gid)
-np.testing.assert_allclose(qr2.best_dist, qr.best_dist, rtol=1e-6)
+np.testing.assert_array_equal(qr2.topk_gid[:, 0], qr.topk_gid[:, 0])
+np.testing.assert_allclose(qr2.topk_dist[:, 0], qr.topk_dist[:, 0], rtol=1e-6)
 np.testing.assert_array_equal(qr2.n_within_cr, qr.n_within_cr)
 np.testing.assert_array_equal(qr2.fq, qr.fq)
 # the same rows live on the same shards regardless of arrival order
@@ -86,8 +86,8 @@ for lo, hi in ((512, 1149), (1149, 1150), (1150, 2048)):
     assert r.drops == 0 and r.n_inserted == hi - lo, (lo, hi, r)
 assert idx2.n_live == 2048
 qr2 = idx2.query(queries)
-np.testing.assert_array_equal(qr2.best_gid, qr.best_gid)
-np.testing.assert_allclose(qr2.best_dist, qr.best_dist, rtol=1e-6)
+np.testing.assert_array_equal(qr2.topk_gid[:, 0], qr.topk_gid[:, 0])
+np.testing.assert_allclose(qr2.topk_dist[:, 0], qr.topk_dist[:, 0], rtol=1e-6)
 print("OK")
 """)
     assert "OK" in out
@@ -100,17 +100,17 @@ def test_delete_tombstone_and_slot_reuse():
 idx = DistributedLSHIndex(cfg, mesh)
 idx.build(data)
 qr = idx.query(queries)
-hit_gids = np.unique(qr.best_gid[np.isfinite(qr.best_dist)])
+hit_gids = np.unique(qr.topk_gid[:, 0][np.isfinite(qr.topk_dist[:, 0])])
 victims = hit_gids[:20]
 
 dr = idx.delete(victims)
 assert dr.n_deleted == len(victims)
 assert idx.n_live == 2048 - len(victims)
 qr2 = idx.query(queries)
-assert not np.isin(qr2.best_gid, victims).any()
+assert not np.isin(qr2.topk_gid[:, 0], victims).any()
 # answers for queries whose best was untouched are unchanged
-keep = ~np.isin(qr.best_gid, victims)
-np.testing.assert_allclose(qr2.best_dist[keep], qr.best_dist[keep],
+keep = ~np.isin(qr.topk_gid[:, 0], victims)
+np.testing.assert_allclose(qr2.topk_dist[keep, 0], qr.topk_dist[keep, 0],
                            rtol=1e-6)
 
 # re-insert the same points (fresh gids): slots are reused, not appended
@@ -119,7 +119,7 @@ r = idx.insert(data[np.asarray(victims)])
 assert r.drops == 0 and idx.store.capacity == cap_before
 assert idx.n_live == 2048
 qr3 = idx.query(queries)
-assert np.isfinite(qr3.best_dist).sum() == np.isfinite(qr.best_dist).sum()
+assert np.isfinite(qr3.topk_dist[:, 0]).sum() == np.isfinite(qr.topk_dist[:, 0]).sum()
 # double delete of a missing gid is a no-op
 assert idx.delete(victims).n_deleted == 0
 print("OK")
@@ -195,8 +195,8 @@ assert abs(rec_dist - rep.recall_at_k) < 1e-9, (rec_dist, rep.recall_at_k)
 
 # K=1 == old best-1 contract == column 0 of any larger K
 qr1 = idx.query(queries, k_neighbors=1)
-np.testing.assert_array_equal(qr1.best_gid, qr10.topk_gid[:, 0])
-np.testing.assert_allclose(qr1.best_dist, qr10.topk_dist[:, 0], rtol=1e-6)
+np.testing.assert_array_equal(qr1.topk_gid[:, 0], qr10.topk_gid[:, 0])
+np.testing.assert_allclose(qr1.topk_dist[:, 0], qr10.topk_dist[:, 0], rtol=1e-6)
 np.testing.assert_array_equal(qr1.n_within_cr, qr10.n_within_cr)
 # finite entries per row == min(K, candidates emitted)
 np.testing.assert_array_equal(np.isfinite(qr10.topk_dist).sum(1),
