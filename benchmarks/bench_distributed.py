@@ -117,6 +117,7 @@ _TABLES_SCRIPT = """
 import json, time
 import jax, numpy as np
 import jax.numpy as jnp
+from repro.analysis import jaxpr_pass, load_contracts
 from repro.compat import make_mesh
 from repro.core import (LSHConfig, Scheme, DistributedLSHIndex,
                         lsh_topk_reference, nearest_neighbors, recall_at_k,
@@ -129,7 +130,9 @@ data, queries, _ = planted_random(n=N, m=M, d=D, r=0.3, seed=0)
 data, queries = jnp.asarray(data), jnp.asarray(queries)
 mesh = make_mesh((8,), ("shard",))
 _, true_idx = nearest_neighbors(np.asarray(data), np.asarray(queries), K)
-print("scheme,T,build_ms,query_cold_ms,query_warm_ms,jaxpr_lines,"
+contracts = load_contracts()
+budgets = contracts["jaxpr"]["collectives"]
+print("scheme,T,build_ms,query_cold_ms,query_warm_ms,jaxpr_eqns,"
       "rows_per_query,recall_at_10,collectives_per_query,union_exact")
 trace = {{}}
 for T in TABLES:
@@ -144,10 +147,24 @@ for T in TABLES:
     st = idx.store
     qf = idx._make_query_fn(M, st.capacity, idx._query_capacity(M // 8),
                             False, K, st.n_sorted, 4)
-    trace[f"jaxpr_lines_T{{T}}"] = str(jax.make_jaxpr(qf)(
+    qj = jax.make_jaxpr(qf)(
         queries, jnp.arange(M, dtype=jnp.int32), st.x, st.packed, st.gid,
-        st.table, st.valid, st.bucket_start, st.bucket_end)).count("\\n")
-    jaxpr_lines = trace[f"jaxpr_lines_T{{T}}"]
+        st.table, st.valid, st.bucket_start, st.bucket_end)
+    # structural counters from the analyzer (primitive identity, not
+    # text regex); counts are recorded in the --json trace and gated by
+    # check_regression (ratio for eqns, exact for collectives)
+    trace[f"jaxpr_eqns_T{{T}}"] = jaxpr_pass.eqn_count(qj)
+    qc = jaxpr_pass.collective_counts(qj)
+    assert not jaxpr_pass.check_collectives(qc, budgets["query"]), (T, qc)
+    trace[f"collectives_query_T{{T}}"] = qc.get("all_to_all", 0)
+    ins = idx._make_insert_fn(M // 8, idx._dispatch_capacity(M // 8 * T),
+                              st.capacity, st.n_sorted)
+    ic = jaxpr_pass.collective_counts(jax.make_jaxpr(ins)(
+        data[:M], jnp.arange(M, dtype=jnp.int32), jnp.ones(M, bool),
+        st.x, st.packed, st.gid, st.table, st.key, st.valid))
+    assert not jaxpr_pass.check_collectives(ic, budgets["insert"]), (T, ic)
+    trace[f"collectives_insert_T{{T}}"] = ic.get("all_to_all", 0)
+    jaxpr_eqns = trace[f"jaxpr_eqns_T{{T}}"]
     t0 = time.monotonic(); qr = idx.query(queries); t_q = time.monotonic()-t0
     assert br.drops == 0 and qr.drops == 0, (T, br.drops, qr.drops)
     rec = recall_at_k(qr.topk_gid, true_idx)
@@ -158,14 +175,15 @@ for T in TABLES:
     rep = simulate(cfg, data, queries)
     assert abs(qr.fq.mean() - rep.fq_mean) < 1e-6
     print(f"layered,{{T}},{{t_b*1e3:.1f}},{{t_cold*1e3:.1f}},"
-          f"{{t_q*1e3:.1f}},{{jaxpr_lines}},"
+          f"{{t_q*1e3:.1f}},{{jaxpr_eqns}},"
           f"{{qr.fq.mean():.2f}},{{rec:.3f}},{{COLLECTIVES_PER_QUERY}},"
           f"{{exact}}")
     assert exact, T
-lines = [v for k, v in trace.items() if k.startswith("jaxpr_lines")]
-if len(lines) > 1:
-    assert max(lines) <= 1.25 * min(lines), ("query jaxpr grows with T",
-                                             trace)
+eqns = {{int(k.split("_T")[1]): v for k, v in trace.items()
+        if k.startswith("jaxpr_eqns")}}
+flat = jaxpr_pass.check_flatness(
+    eqns, contracts["jaxpr"]["flatness"]["max_ratio"], "query")
+assert not flat, (flat, trace)
 print("TRACE_JSON " + json.dumps(trace))
 """
 
@@ -195,12 +213,16 @@ def tables_sweep(smoke: bool = False, tables=(1, 2, 4)) -> dict:
     an exact-agreement check against the single-machine union reference
     and the constant per-step collective count.
 
-    Also measures the query step's trace cost per T -- ``jaxpr_lines_T<t>``
-    (pretty-printed jaxpr line count; FLAT in T with the gather-by-table
-    hash pass, asserted within 25%) and ``compile_s_T<t>`` (cold trace +
-    compile + run wall time) -- and returns them as a dict so ``run.py
-    --smoke --json`` can record them for the CI regression gate
-    (``check_regression`` holds jaxpr_lines_* to a tight 1.15x)."""
+    Also measures the query step's trace cost per T with the analyzer's
+    structural counters -- ``jaxpr_eqns_T<t>`` (equation count; FLAT in
+    T with the gather-by-table hash pass, asserted at the manifest's
+    flatness ratio), ``collectives_{insert,query}_T<t>`` (fused
+    all_to_all counts, exact-checked against the per-phase budgets in
+    ``contracts.json``) and ``compile_s_T<t>`` (cold trace + compile +
+    run wall time) -- and returns them as a dict so ``run.py --smoke
+    --json`` can record them for the CI regression gate
+    (``check_regression`` ratio-gates jaxpr_eqns_* and exact-gates
+    collectives_*)."""
     import json
     sizes = dict(n=1024, m=64) if smoke else dict(n=4096, m=256)
     out = _run_script(_TABLES_SCRIPT.format(tables=tuple(tables), **sizes))

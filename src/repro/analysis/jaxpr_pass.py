@@ -1,0 +1,185 @@
+"""Structural jaxpr contract pass.
+
+Walks ``ClosedJaxpr`` equations recursively — descending into pjit /
+shard_map / scan / cond / pallas_call sub-jaxprs — and checks contracts
+by **primitive identity**, never by regexing pretty-printed text.  The
+text-based checkers this replaces had two latent holes: ``psum`` traces
+as the primitive ``psum2`` on current jax (a ``\\bpsum\\b`` regex counts
+zero), and line counts conflate formatting with structure.
+
+Public helpers double as the shared counters for tests and benchmarks:
+
+- :func:`collective_counts` — normalized per-collective counts.
+- :func:`eqn_count` — total structural equation count.
+- :func:`analyze_phase` — full per-phase contract check vs the manifest.
+- :func:`check_flatness` — max/min eqn ratio across a T sweep.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Iterator, List
+
+# Normalization: primitive name -> canonical collective name.  jax
+# versions rename these (psum -> psum2); the budget is expressed in
+# canonical names so the manifest survives upgrades.
+COLLECTIVE_PRIMS = {
+    "all_to_all": "all_to_all",
+    "all_gather": "all_gather",
+    "all_gather_invariant": "all_gather",
+    "pgather": "all_gather",
+    "psum": "psum",
+    "psum2": "psum",
+    "psum_invariant": "psum",
+    "ppermute": "ppermute",
+    "pshuffle": "ppermute",
+    "reduce_scatter": "reduce_scatter",
+    "pmax": "pmax",
+    "pmin": "pmin",
+    "pbroadcast": "pbroadcast",
+}
+
+
+def _sub_jaxprs(eqn) -> Iterator[Any]:
+    """Yield inner jaxprs referenced by an equation's params."""
+    for v in eqn.params.values():
+        vals = v if isinstance(v, (tuple, list)) else (v,)
+        for sub in vals:
+            if hasattr(sub, "jaxpr") and hasattr(sub.jaxpr, "eqns"):
+                yield sub.jaxpr  # ClosedJaxpr
+            elif hasattr(sub, "eqns"):
+                yield sub  # raw Jaxpr
+
+
+def iter_eqns(jaxpr) -> Iterator[Any]:
+    """Depth-first iterator over every equation, including sub-jaxprs."""
+    if hasattr(jaxpr, "jaxpr"):  # ClosedJaxpr -> Jaxpr
+        jaxpr = jaxpr.jaxpr
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for sub in _sub_jaxprs(eqn):
+            yield from iter_eqns(sub)
+
+
+def eqn_count(jaxpr) -> int:
+    """Total number of equations, counted structurally."""
+    return sum(1 for _ in iter_eqns(jaxpr))
+
+
+def collective_counts(jaxpr) -> Dict[str, int]:
+    """Count collective primitives by canonical name (absent == zero)."""
+    counts: Dict[str, int] = {}
+    for eqn in iter_eqns(jaxpr):
+        name = COLLECTIVE_PRIMS.get(eqn.primitive.name)
+        if name is not None:
+            counts[name] = counts.get(name, 0) + 1
+    return counts
+
+
+def check_collectives(counts: Dict[str, int], budget: Dict[str, int],
+                      label: str = "") -> List[str]:
+    """Exact-match collective budget check.
+
+    Every canonical collective kind not named in ``budget`` has an
+    implicit budget of zero, so a brand-new collective primitive fails
+    closed instead of slipping past a fixed allowlist.
+    """
+    prefix = f"{label}: " if label else ""
+    violations = []
+    budget = {k: v for k, v in budget.items() if not k.startswith("_")}
+    for kind in sorted(set(budget) | set(counts)):
+        want = int(budget.get(kind, 0))
+        got = int(counts.get(kind, 0))
+        if got != want:
+            violations.append(
+                f"{prefix}collective budget violated: {kind} x{got}, "
+                f"contract allows exactly {want}")
+    return violations
+
+
+def _is_extended_dtype(dtype) -> bool:
+    """True for extended dtypes (PRNG key arrays report itemsize 8 but
+    carry no 64-bit wire payload)."""
+    try:
+        import jax
+        return jax.dtypes.issubdtype(dtype, jax.dtypes.extended)
+    except Exception:
+        return False
+
+
+def intermediate_stats(jaxpr) -> Dict[str, Any]:
+    """Largest intermediate (by element count) and any 64-bit outputs."""
+    top = {"numel": 0, "primitive": None, "shape": (), "dtype": None}
+    wide: List[Dict[str, Any]] = []
+    seen_wide = set()
+    for eqn in iter_eqns(jaxpr):
+        for var in eqn.outvars:
+            aval = getattr(var, "aval", None)
+            shape = getattr(aval, "shape", None)
+            if shape is None:
+                continue
+            numel = math.prod(shape) if shape else 1
+            if numel > top["numel"]:
+                top = {"numel": int(numel), "primitive": eqn.primitive.name,
+                       "shape": tuple(int(s) for s in shape),
+                       "dtype": str(getattr(aval, "dtype", "?"))}
+            dtype = getattr(aval, "dtype", None)
+            if (dtype is not None and not _is_extended_dtype(dtype)
+                    and getattr(dtype, "itemsize", 0) == 8):
+                key = (eqn.primitive.name, str(dtype))
+                if key not in seen_wide:
+                    seen_wide.add(key)
+                    wide.append({"primitive": eqn.primitive.name,
+                                 "dtype": str(dtype),
+                                 "shape": tuple(int(s) for s in shape)})
+    return {"max_intermediate": top, "wide_dtypes": wide}
+
+
+def analyze_phase(jaxpr, phase: str, n_tables: int,
+                  contracts: Dict[str, Any]) -> Dict[str, Any]:
+    """Run every jaxpr contract for one phase; returns a report dict
+    whose ``violations`` list is empty iff the contract holds."""
+    jc = contracts["jaxpr"]
+    label = f"{phase}[T={n_tables}]"
+    counts = collective_counts(jaxpr)
+    violations = check_collectives(counts, jc["collectives"][phase], label)
+
+    stats = intermediate_stats(jaxpr)
+    ceiling = int(jc["max_intermediate_numel_per_table"][phase]) * n_tables
+    top = stats["max_intermediate"]
+    if top["numel"] > ceiling:
+        violations.append(
+            f"{label}: intermediate {top['primitive']} {top['shape']} has "
+            f"{top['numel']} elements > per-phase ceiling {ceiling} "
+            f"(possible O(R*N) materialization)")
+    if jc.get("forbid_wide_dtypes", True) and stats["wide_dtypes"]:
+        offender = stats["wide_dtypes"][0]
+        violations.append(
+            f"{label}: 64-bit dtype drift in wire path: "
+            f"{offender['primitive']} -> {offender['dtype']} "
+            f"{offender['shape']} (int32/f32 payload contract)")
+
+    return {
+        "phase": phase,
+        "n_tables": n_tables,
+        "collectives": counts,
+        "eqns": eqn_count(jaxpr),
+        "max_intermediate": top,
+        "max_intermediate_ceiling": ceiling,
+        "wide_dtypes": stats["wide_dtypes"],
+        "violations": violations,
+    }
+
+
+def check_flatness(eqns_by_tables: Dict[int, int], max_ratio: float,
+                   phase: str = "") -> List[str]:
+    """Assert the jaxpr is flat in T: max/min eqn count <= max_ratio."""
+    if len(eqns_by_tables) < 2:
+        return []
+    lo, hi = min(eqns_by_tables.values()), max(eqns_by_tables.values())
+    if hi > max_ratio * lo:
+        detail = ", ".join(f"T={t}: {n}" for t, n in sorted(eqns_by_tables.items()))
+        prefix = f"{phase}: " if phase else ""
+        return [f"{prefix}jaxpr not flat in n_tables ({detail}); "
+                f"max/min = {hi / lo:.3f} > {max_ratio}"]
+    return []

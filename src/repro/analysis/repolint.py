@@ -1,0 +1,202 @@
+"""AST-based repo lint: repo-specific rules ruff can't express.
+
+Four rules, all configured via the ``repolint`` section of
+``contracts.json`` (ruff.toml stays purely mechanical):
+
+- **host-sync**: no ``np.asarray`` / ``np.array`` / ``jax.device_get``
+  / ``.block_until_ready()`` inside hot paths — the shard step closures
+  (``insert_shard`` / ``query_shard`` / ``delete_shard``) or any
+  function in ``kernels/``.  A host sync there serializes every device
+  step behind a device->host copy.
+- **deprecated-shim**: no access to ``best_dist`` / ``best_gid`` /
+  ``table_params`` / ``table_keys`` outside the files that define (or
+  deliberately cover) the compat shims.
+- **kw-only-kernel-api**: ``QueryBatch`` / ``StoreView`` and the
+  ``bucket_search*`` entry points take keyword arguments only;
+  positional calls silently break when the pytree layout changes.
+- **store-mutation**: ``StoreState`` construction and store-column
+  attribute assignment only inside ``core/index.py`` /
+  ``core/store_layout.py`` — the CSR invariants (sorted region, spans,
+  sentinel padding) are theirs to maintain.
+
+Pure stdlib (``ast``); importable without jax so ``check`` can run it
+before XLA initialises.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Any, Dict, Iterable, List, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class LintViolation:
+    path: str
+    line: int
+    rule: str
+    msg: str
+
+    def as_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.msg}"
+
+
+def _dotted_name(node: ast.AST) -> Optional[str]:
+    """`a.b.c` -> "a.b.c" for Name/Attribute chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_storeish(node: ast.AST) -> bool:
+    """Heuristic: does this expression look like a StoreState value?"""
+    if isinstance(node, ast.Name):
+        return node.id in ("st", "store") or "store" in node.id.lower()
+    if isinstance(node, ast.Attribute):
+        return "store" in node.attr.lower()
+    return False
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, relpath: str, cfg: Dict[str, Any]):
+        self.relpath = relpath.replace(os.sep, "/")
+        self.cfg = cfg
+        self.violations: List[LintViolation] = []
+        self._func_stack: List[str] = []
+        self._hot_module = any(self.relpath.startswith(m.rstrip("/") + "/")
+                               or self.relpath == m
+                               for m in cfg.get("hot_modules", ()))
+
+    # -- helpers ----------------------------------------------------------
+    def _flag(self, node: ast.AST, rule: str, msg: str) -> None:
+        self.violations.append(
+            LintViolation(self.relpath, getattr(node, "lineno", 0), rule, msg))
+
+    def _allowed(self, key: str) -> bool:
+        return self.relpath in set(self.cfg.get(key, ()))
+
+    def _in_hot_scope(self) -> bool:
+        if not self._func_stack:
+            return False  # module level: setup/config, not a traced step
+        hot_fns = set(self.cfg.get("hot_functions", ()))
+        return self._hot_module or any(f in hot_fns for f in self._func_stack)
+
+    # -- scope tracking ---------------------------------------------------
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._func_stack.append(node.name)
+        self.generic_visit(node)
+        self._func_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+    # -- rules ------------------------------------------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        name = _dotted_name(node.func)
+        last = name.rsplit(".", 1)[-1] if name else None
+
+        if self._in_hot_scope():
+            sync_calls = set(self.cfg.get("host_sync_calls", ()))
+            sync_methods = set(self.cfg.get("host_sync_methods", ()))
+            if name in sync_calls:
+                self._flag(node, "host-sync",
+                           f"{name}() forces a device->host sync inside a "
+                           f"hot path (scope {'/'.join(self._func_stack)})")
+            elif (isinstance(node.func, ast.Attribute)
+                  and node.func.attr in sync_methods):
+                self._flag(node, "host-sync",
+                           f".{node.func.attr}() blocks the hot path "
+                           f"(scope {'/'.join(self._func_stack)})")
+
+        if (last in set(self.cfg.get("kw_only_calls", ()))
+                and node.args and not self._allowed("kw_only_allow")):
+            self._flag(node, "kw-only-kernel-api",
+                       f"{last}() takes keyword arguments only; "
+                       f"{len(node.args)} positional argument(s) passed")
+
+        if last == "StoreState" and not self._allowed("store_mutation_allow"):
+            self._flag(node, "store-mutation",
+                       "StoreState may only be constructed in "
+                       "core/index.py or core/store_layout.py "
+                       "(CSR invariants live there)")
+        self.generic_visit(node)
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        if (node.attr in set(self.cfg.get("deprecated_attrs", ()))
+                and not self._allowed("deprecated_allow")):
+            self._flag(node, "deprecated-shim",
+                       f".{node.attr} is a deprecated compat shim "
+                       f"(removal tracked; use the stacked/top-K API)")
+        self.generic_visit(node)
+
+    def _check_store_assign(self, target: ast.AST) -> None:
+        if (isinstance(target, ast.Attribute)
+                and target.attr in set(self.cfg.get("store_columns", ()))
+                and _is_storeish(target.value)
+                and not self._allowed("store_mutation_allow")):
+            self._flag(target, "store-mutation",
+                       f"direct mutation of store column .{target.attr} "
+                       f"outside core/index.py / core/store_layout.py")
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for t in node.targets:
+            for el in (t.elts if isinstance(t, (ast.Tuple, ast.List)) else [t]):
+                self._check_store_assign(el)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self._check_store_assign(node.target)
+        self.generic_visit(node)
+
+
+def lint_source(source: str, relpath: str,
+                cfg: Dict[str, Any]) -> List[LintViolation]:
+    """Lint one file's source text (unit-testable entry point)."""
+    try:
+        tree = ast.parse(source, filename=relpath)
+    except SyntaxError as exc:
+        return [LintViolation(relpath, exc.lineno or 0, "syntax",
+                              f"unparseable: {exc.msg}")]
+    linter = _Linter(relpath, cfg)
+    linter.visit(tree)
+    return linter.violations
+
+
+def scan_files(paths: Iterable[str], cfg: Dict[str, Any],
+               rel_root: Optional[str] = None) -> List[LintViolation]:
+    """Lint explicit files; paths reported relative to ``rel_root``."""
+    out: List[LintViolation] = []
+    for path in paths:
+        rel = os.path.relpath(path, rel_root) if rel_root else path
+        with open(path) as f:
+            out.extend(lint_source(f.read(), rel, cfg))
+    return out
+
+
+def scan(repo_root: str, cfg: Dict[str, Any]) -> Dict[str, Any]:
+    """Walk the manifest's scan roots and lint every .py file."""
+    exclude = tuple(e.rstrip("/") for e in cfg.get("exclude", ()))
+    files: List[str] = []
+    for root in cfg.get("scan_roots", ()):
+        base = os.path.join(repo_root, root)
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = [d for d in sorted(dirnames)
+                           if d not in ("__pycache__", ".git")]
+            rel_dir = os.path.relpath(dirpath, repo_root).replace(os.sep, "/")
+            if any(rel_dir == e or rel_dir.startswith(e + "/")
+                   for e in exclude):
+                dirnames[:] = []
+                continue
+            files.extend(os.path.join(dirpath, f) for f in sorted(filenames)
+                         if f.endswith(".py"))
+    violations = scan_files(files, cfg, rel_root=repo_root)
+    return {"files_scanned": len(files),
+            "violations": [v.as_dict() for v in violations]}

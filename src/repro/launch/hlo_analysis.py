@@ -4,6 +4,12 @@ cost_analysis() gives per-device HLO FLOPs / bytes, but NOT collective
 bytes -- those are parsed from the optimized HLO text by summing the
 result-shape bytes of every all-reduce / all-gather / reduce-scatter /
 all-to-all / collective-permute (async "-start" forms counted once).
+
+This module is descriptive (benchmarks/collective_report.py, roofline).
+The GATING layer built on it is repro.analysis.hlo_pass: it reuses
+collective_bytes() to exact-check compiled collective counts against
+src/repro/analysis/contracts.json, and adds donation-aliasing,
+temp-byte, and VMEM budget checks (`python -m repro.analysis.check`).
 """
 from __future__ import annotations
 

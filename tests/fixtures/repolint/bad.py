@@ -1,0 +1,49 @@
+"""Repolint fixture: one POSITIVE (flagged) case per rule.
+
+Scanned only by tests/test_contracts.py; every function below must
+produce exactly the violation named in its comment."""
+import numpy as np
+
+
+def query_shard(batch):
+    # host-sync: np.asarray inside a hot step closure
+    return np.asarray(batch)
+
+
+def insert_shard(rows):
+    # host-sync: .block_until_ready inside a hot step closure
+    return rows.sum().block_until_ready()
+
+
+def legacy_read(result):
+    # deprecated-shim: best_dist compat property
+    return result.best_dist
+
+
+def legacy_params(idx):
+    # deprecated-shim: table_params compat property
+    return idx.table_params
+
+
+def positional_kernel(q, qsq, buckets):
+    from repro.kernels.types import QueryBatch
+    # kw-only-kernel-api: positional QueryBatch construction
+    return QueryBatch(q, qsq, buckets)
+
+
+def positional_search(query, store):
+    from repro.kernels import ops
+    # kw-only-kernel-api: positional bucket_search call
+    return ops.bucket_search(query, store)
+
+
+def rogue_store(x, packed):
+    from repro.core.index import StoreState
+    # store-mutation: StoreState constructed outside its owner modules
+    return StoreState(x, packed)
+
+
+def rogue_mutation(st, mask):
+    # store-mutation: direct column assignment outside the owners
+    st.valid = mask
+    return st

@@ -1,0 +1,33 @@
+"""Repolint fixture: exercises every rule's NEGATIVE (allowed) side.
+
+Scanned only by tests/test_contracts.py -- the main repo scan excludes
+tests/fixtures/repolint via the manifest."""
+import numpy as np
+
+import jax.numpy as jnp
+
+
+def load_batch(raw):
+    # host sync OUTSIDE any hot scope: allowed
+    return np.asarray(raw, np.float32)
+
+
+def query_shard(q, store_x):
+    # hot scope, but jnp stays on device: allowed
+    return jnp.dot(q, store_x.T)
+
+
+def run_search(query, store):
+    from repro.kernels import ops
+    # keyword-only kernel API used correctly: allowed
+    return ops.bucket_search(query=query, store=store, cr2=1.0, L=8, k=4)
+
+
+def read_columns(st):
+    # READING store columns anywhere is fine; only mutation is owned
+    return st.valid.sum(), st.bucket_start
+
+
+def topk_access(result):
+    # the non-deprecated top-K API: allowed
+    return result.topk_dist, result.topk_gid

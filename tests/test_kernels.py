@@ -202,35 +202,27 @@ def test_bucket_search_no_rxn_buffer():
     # independent of problem size by construction (no R/N argument), and
     # the traced computation carries no (R, N)-shaped value anywhere --
     # walk every eqn output shape recursively through sub-jaxprs (pjit,
-    # pallas_call kernel body), where the tiles are (TILE_R, TILE_N).
-    def _subjaxprs(params):
-        for v in params.values():
-            for x in (v if isinstance(v, (list, tuple)) else (v,)):
-                inner = getattr(x, "jaxpr", None)     # ClosedJaxpr
-                if inner is not None and hasattr(inner, "eqns"):
-                    yield inner
-                elif hasattr(x, "eqns"):              # raw Jaxpr
-                    yield x
+    # pallas_call kernel body, where the tiles are (TILE_R, TILE_N))
+    # with the analyzer's structural iterator.
+    from repro.analysis import jaxpr_pass
 
-    def shapes(jxp):
-        for eqn in jxp.eqns:
+    def shapes(cj):
+        for eqn in jaxpr_pass.iter_eqns(cj):
             for var in eqn.outvars:
                 yield getattr(var.aval, "shape", ())
-            for sub in _subjaxprs(eqn.params):
-                yield from shapes(sub)
 
     R, N = 256, 1024
     query, store = _qs(_bucket_case(jax.random.PRNGKey(1), R, N, d, L))
     jaxpr = jax.make_jaxpr(
         lambda qb, sv: ops.bucket_search(query=qb, store=sv, cr2=2.5,
                                          L=L, k=K))(query, store)
-    assert (R, N) not in set(shapes(jaxpr.jaxpr))
+    assert (R, N) not in set(shapes(jaxpr))
     # positive control: the same walk DOES see the dense (R, N) matrix in
     # the jnp oracle, so the assertion above has teeth
     jaxpr_ref = jax.make_jaxpr(
         lambda qb, sv: ref.bucket_search_ref(query=qb, store=sv, cr2=2.5,
                                              L=L, K=K))(query, store)
-    assert (R, N) in set(shapes(jaxpr_ref.jaxpr))
+    assert (R, N) in set(shapes(jaxpr_ref))
 
 
 # ---------------------------------------------------------------------------

@@ -190,12 +190,9 @@ def test_collective_count_independent_of_tables():
     T.  This is the acceptance criterion for the one-collective-per-phase
     refactor."""
     out = _run(COMMON + """
-import re
+from repro.analysis import jaxpr_pass, load_contracts
 
-def collective_counts(jaxpr_str):
-    return {p: len(re.findall(rf"\\b{p}\\b", jaxpr_str))
-            for p in ("all_to_all", "all_gather", "psum", "ppermute",
-                      "all_reduce")}
+budgets = load_contracts()["jaxpr"]["collectives"]
 
 for T in (1, 2, 4):
     cfg = cfg_t(T, d=32, k=8, L=8)
@@ -205,23 +202,22 @@ for T in (1, 2, 4):
     n_loc = 64 // 8
     ins = idx._make_insert_fn(n_loc, idx._dispatch_capacity(n_loc * T),
                               st.capacity, st.n_sorted)
-    s = str(jax.make_jaxpr(ins)(
+    c = jaxpr_pass.collective_counts(jax.make_jaxpr(ins)(
         data[:64, :32], jnp.arange(64, dtype=jnp.int32),
         jnp.ones(64, bool), st.x, st.packed, st.gid, st.table, st.key,
         st.valid))
-    c = collective_counts(s)
-    assert c["all_to_all"] == 1, (T, c)
-    assert c["all_gather"] == c["psum"] == c["ppermute"] == 0, (T, c)
+    # structural, exact-match: one fused a2a, every other kind zero
+    assert not jaxpr_pass.check_collectives(c, budgets["insert"]), (T, c)
+    assert c == {"all_to_all": 1}, (T, c)
 
     qf = idx._make_query_fn(64, st.capacity, idx._query_capacity(8),
                             False, 4, st.n_sorted, 4)
-    s = str(jax.make_jaxpr(qf)(
+    c = jaxpr_pass.collective_counts(jax.make_jaxpr(qf)(
         queries[:64, :32], jnp.arange(64, dtype=jnp.int32),
         st.x, st.packed, st.gid, st.table, st.valid,
         st.bucket_start, st.bucket_end))
-    c = collective_counts(s)
-    assert c["all_to_all"] == 2, (T, c)
-    assert c["all_gather"] == c["psum"] == c["ppermute"] == 0, (T, c)
+    assert not jaxpr_pass.check_collectives(c, budgets["query"]), (T, c)
+    assert c == {"all_to_all": 2}, (T, c)
 print("OK")
 """)
     assert "OK" in out

@@ -175,18 +175,22 @@ def test_t1_gather_is_identity_bitwise():
 @pytest.mark.multidevice
 def test_query_jaxpr_size_flat_in_tables():
     """The acceptance criterion for the gather refactor: the query-step
-    (and insert-step) jaxpr no longer grows linearly in T."""
+    (and insert-step) jaxpr no longer grows linearly in T.  Counted
+    structurally via the analyzer; the ceiling is the single manifest
+    flatness ratio (contracts.json), not a local constant."""
     script = """
     import jax, numpy as np
     import jax.numpy as jnp
+    from repro.analysis import jaxpr_pass, load_contracts
     from repro.compat import make_mesh
     from repro.core import LSHConfig, Scheme, DistributedLSHIndex
     from repro.data import planted_random
 
+    ratio = load_contracts()["jaxpr"]["flatness"]["max_ratio"]
     mesh = make_mesh((8,), ("shard",))
     data, queries, _ = planted_random(n=512, m=64, d=32, r=0.3, seed=0)
     data, queries = jnp.asarray(data), jnp.asarray(queries)
-    q_lines, i_lines = {}, {}
+    q_eqns, i_eqns = {}, {}
     for T in (1, 2, 4):
         cfg = LSHConfig(d=32, k=8, W=1.2, r=0.3, c=2.0, L=8, n_shards=8,
                         scheme=Scheme.LAYERED, seed=0, n_tables=T)
@@ -195,23 +199,20 @@ def test_query_jaxpr_size_flat_in_tables():
         st = idx.store
         qf = idx._make_query_fn(64, st.capacity, idx._query_capacity(8),
                                 False, 4, st.n_sorted, 4)
-        s = str(jax.make_jaxpr(qf)(
+        q_eqns[T] = jaxpr_pass.eqn_count(jax.make_jaxpr(qf)(
             queries[:64], jnp.arange(64, dtype=jnp.int32),
             st.x, st.packed, st.gid, st.table, st.valid,
             st.bucket_start, st.bucket_end))
-        q_lines[T] = s.count("\\n")
         n_loc = 64 // 8
         inf = idx._make_insert_fn(n_loc, idx._dispatch_capacity(n_loc * T),
                                   st.capacity, st.n_sorted)
-        s = str(jax.make_jaxpr(inf)(
+        i_eqns[T] = jaxpr_pass.eqn_count(jax.make_jaxpr(inf)(
             data[:64], jnp.arange(64, dtype=jnp.int32), jnp.ones(64, bool),
             st.x, st.packed, st.gid, st.table, st.key, st.valid))
-        i_lines[T] = s.count("\\n")
-    print("query jaxpr lines:", q_lines, "insert:", i_lines)
-    # flat, not linear: T=4 within 25% of T=1 (the old looped path was
-    # ~T x larger)
-    assert q_lines[4] <= 1.25 * q_lines[1], q_lines
-    assert i_lines[4] <= 1.25 * i_lines[1], i_lines
+    print("query jaxpr eqns:", q_eqns, "insert:", i_eqns)
+    # flat, not linear (the old looped path was ~T x larger)
+    assert not jaxpr_pass.check_flatness(q_eqns, ratio, "query"), q_eqns
+    assert not jaxpr_pass.check_flatness(i_eqns, ratio, "insert"), i_eqns
     print("OK")
     """
     env = dict(os.environ)
