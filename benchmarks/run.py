@@ -69,8 +69,9 @@ def smoke(json_out: str | None = None):
     """
     from benchmarks import (bench_bucket_gather, bench_distributed,
                             bench_kernels, bench_mplsh, bench_persist,
-                            bench_schemes, bench_shuffle_vs_L,
-                            collective_report, paper_common, roofline)
+                            bench_schemes, bench_serving,
+                            bench_shuffle_vs_L, collective_report,
+                            paper_common, roofline)
     assert collective_report and roofline  # import-only (need artifacts)
     paper_common.set_scale(n=2000, m=200)
     rec = _Recorder("smoke")
@@ -111,6 +112,14 @@ def smoke(json_out: str | None = None):
     pm = rec.run("persist_durability",
                  lambda: bench_persist.main(smoke=True))
     rec.note("persist_durability", **pm)
+    _section("smoke: async pipelined serving vs sync micro-batcher "
+             "(8 host devices)")
+    # single-core CI cannot overlap device work, so the smoke lane only
+    # records the metrics (bitwise equivalence IS asserted in-script);
+    # the >= 1.3x steady-state gate runs in the full lane
+    sv = rec.run("serving_pipeline",
+                 lambda: bench_serving.main(smoke=True))
+    rec.note("serving_pipeline", **sv)
     print("\nsmoke OK: all benchmark scripts import and run")
     if json_out:
         rec.dump(json_out)
@@ -204,6 +213,20 @@ def main(argv=None):
         pm = rec.run("persist_durability", bench_persist.main)
         rec.note("persist_durability", **pm)
         print(f"persist,{(time.monotonic() - t0) * 1e6:.0f},sizes=2")
+
+        _section("async pipelined serving vs sync micro-batcher "
+                 "(8 host devices, subprocess)")
+        from benchmarks import bench_serving
+        t0 = time.monotonic()
+        sv = rec.run("serving_pipeline", bench_serving.main)
+        rec.note("serving_pipeline", **sv)
+        print(f"serving,{(time.monotonic() - t0) * 1e6:.0f},"
+              f"speedup={sv['speedup']}x")
+        if sv["speedup"] < 1.3:
+            failures.append(
+                f"serving_pipeline: async steady-state speedup "
+                f"{sv['speedup']}x < 1.3x over the sync micro-batcher "
+                f"at 8 shards")
 
         import os
         from benchmarks import roofline

@@ -46,6 +46,10 @@ def main():
     ap.add_argument("--snapshot-every", type=int, default=2,
                     help="snapshot (and truncate the WAL) every N serve "
                          "steps (with --snapshot-dir)")
+    ap.add_argument("--pipelined", action="store_true",
+                    help="serve through AsyncLSHService: double-buffered "
+                         "query pipeline, worker threads, and background "
+                         "snapshots (bitwise-identical results)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=True)
@@ -66,7 +70,8 @@ def main():
         cfg, params, doc_tokens[:args.docs], mesh,
         snapshot_dir=args.snapshot_dir, bucket_size=args.batch_size,
         k_neighbors=args.k_neighbors, r=0.2, L=16, k=8, W=0.5,
-        scheme=Scheme.LAYERED, n_tables=args.tables)
+        scheme=Scheme.LAYERED, n_tables=args.tables,
+        pipelined=args.pipelined)
     if rr is not None:
         print(f"[build] WARM restart: snapshot step {rr.step} + "
               f"{rr.replayed_inserts + rr.replayed_deletes} WAL batches "
@@ -97,8 +102,14 @@ def main():
         n_indexed += len(new_gids)
         if (args.snapshot_dir and args.snapshot_every
                 and (b + 1) % args.snapshot_every == 0):
-            persist.snapshot(svc.index, args.snapshot_dir,
-                             wal=svc.service.wal)
+            if args.pipelined:
+                # non-blocking durability: the engine fetches a
+                # consistent point, a writer thread does the file I/O
+                # while the stream keeps serving
+                svc.service.snapshot(args.snapshot_dir).result()
+            else:
+                persist.snapshot(svc.index, args.snapshot_dir,
+                                 wal=svc.service.wal)
 
         # ---- query mix: near-duplicates of docs indexed so far ----
         kq = jax.random.fold_in(jax.random.PRNGKey(2), b)
@@ -125,6 +136,7 @@ def main():
               f"(in top-{args.k_neighbors}: {topk_hits}) "
               f"load max/avg={load.max() / max(load.mean(), 1):.2f}")
 
+    svc.close()
     st = svc.service.stats
     n = max((args.steps - b0) * args.batch_size, 1)
     print(f"[serve] total: self-retrieval {hits}/{n} ({hits / n:.1%}), "

@@ -82,8 +82,10 @@ def _run_compiled_passes(contracts: Dict[str, Any], seed: str | None,
     m, K, G_probe = int(cc["m"]), int(cc["k_neighbors"]), int(cc["probe"])
 
     violations: List[str] = []
-    phases: Dict[str, Dict[str, Any]] = {"insert": {}, "query": {}, "delete": {}}
-    eqns: Dict[str, Dict[int, int]] = {"insert": {}, "query": {}, "delete": {}}
+    PHASES = ("insert", "query", "delete",
+              "query_dispatch", "query_scan", "query_return")
+    phases: Dict[str, Dict[str, Any]] = {p: {} for p in PHASES}
+    eqns: Dict[str, Dict[int, int]] = {p: {} for p in PHASES}
     hlo_T = int(cc["hlo_tables"])
     hlo_ctx: Dict[str, Any] = {}
 
@@ -114,6 +116,19 @@ def _run_compiled_passes(contracts: Dict[str, Any], seed: str | None,
         padded = np.full((n_del,), np.iinfo(np.int32).max, np.int32)
         dargs = (jnp.asarray(padded), st.valid, st.gid)
 
+        # staged query pipeline: the same step cut at its a2a boundaries
+        # (serving/pipeline.py overlaps batches through these three fns)
+        qids = jnp.arange(m, dtype=jnp.int32)
+        sdfn = idx._make_query_dispatch_fn(m, Cq, False)
+        sdargs = (queries, qids)
+        ssfn = idx._make_query_scan_fn(m, st.capacity, Cq, K,
+                                       st.n_sorted, G)
+        ssargs = (jnp.zeros((S * S * Cq, cc["d"] + 2), jnp.int32),
+                  st.x, st.packed, st.gid, st.table, st.valid,
+                  st.bucket_start, st.bucket_end)
+        srfn = idx._make_query_return_fn(m, K)
+        srargs = (jnp.zeros((S * m, 2 * K + 1), jnp.int32),)
+
         qtrace = qf
         if seed == "jaxpr-growth":
             # inject per-table work: eqn count now grows linearly in T
@@ -136,7 +151,10 @@ def _run_compiled_passes(contracts: Dict[str, Any], seed: str | None,
 
         for phase, fn, fargs in (("insert", ifn, iargs),
                                  ("query", qtrace, qargs),
-                                 ("delete", dfn, dargs)):
+                                 ("delete", dfn, dargs),
+                                 ("query_dispatch", sdfn, sdargs),
+                                 ("query_scan", ssfn, ssargs),
+                                 ("query_return", srfn, srargs)):
             cj = jax.make_jaxpr(fn)(*fargs)
             rep = jaxpr_pass.analyze_phase(cj, phase, T, contracts)
             phases[phase][str(T)] = rep
@@ -146,7 +164,9 @@ def _run_compiled_passes(contracts: Dict[str, Any], seed: str | None,
         if T == hlo_T:
             hlo_ctx = {"idx": idx, "ifn": ifn, "iargs": iargs,
                        "qargs": qargs, "m": m, "cap": st.capacity,
-                       "Cq": Cq, "K": K, "ns": st.n_sorted, "G": G}
+                       "Cq": Cq, "K": K, "ns": st.n_sorted, "G": G,
+                       "ssfn": ssfn, "ssargs": ssargs,
+                       "srfn": srfn, "srargs": srargs}
 
     ratio = manifest.flatness_ratio(contracts)
     flat_report: Dict[str, Any] = {"max_ratio": ratio, "eqns": {}}
@@ -164,11 +184,21 @@ def _run_compiled_passes(contracts: Dict[str, Any], seed: str | None,
                              donate_query, hlo_ctx["K"], hlo_ctx["ns"],
                              hlo_ctx["G"])
     compiled_query = qfn.lower(*hlo_ctx["qargs"]).compile()
+    # the staged stages as the pipeline runs them: dispatch donates the
+    # staging buffer; scan/return always donate the routed payloads
+    sdfn = idx._make_query_dispatch_fn(hlo_ctx["m"], hlo_ctx["Cq"],
+                                       donate_query)
+    compiled_dispatch = sdfn.lower(*hlo_ctx["qargs"][:2]).compile()
+    compiled_scan = hlo_ctx["ssfn"].lower(*hlo_ctx["ssargs"]).compile()
+    compiled_return = hlo_ctx["srfn"].lower(*hlo_ctx["srargs"]).compile()
 
     hlo_report: Dict[str, Any] = {"n_tables": hlo_T, "donation": {},
                                   "memory": {}, "collectives": {}}
     for phase, compiled in (("insert", compiled_insert),
-                            ("query", compiled_query)):
+                            ("query", compiled_query),
+                            ("query_dispatch", compiled_dispatch),
+                            ("query_scan", compiled_scan),
+                            ("query_return", compiled_return)):
         text = compiled.as_text()
         don = hlo_pass.donation_report(text, phase, contracts)
         mem = hlo_pass.memory_report(compiled, phase, contracts)
@@ -245,7 +275,8 @@ def main(argv=None) -> int:
             print(f"  - {v}")
     else:
         jx = report.get("jaxpr", {}).get("phases", {})
-        for phase in ("insert", "query", "delete"):
+        for phase in ("insert", "query", "delete",
+                      "query_dispatch", "query_scan", "query_return"):
             for t, rep in sorted(jx.get(phase, {}).items()):
                 coll = rep["collectives"] or "{}"
                 print(f"  ok {phase:6s} T={t}: {rep['eqns']:4d} eqns, "

@@ -56,26 +56,31 @@ def donor_params(hlo_text: str) -> Set[int]:
 
 def donation_report(hlo_text: str, phase: str,
                     contracts: Dict[str, Any]) -> Dict[str, Any]:
-    """Check that donation was honored in the compiled executable."""
+    """Check that donation was honored in the compiled executable.
+
+    Per-phase budgets are named ``{phase}_min_aliased_params`` (params
+    that must be aliased output<-input) and ``{phase}_min_donated_params``
+    (params that must at least be aliased OR registered as buffer
+    donors); a phase with neither key has no donation contract.
+    """
     budget = contracts["hlo"]["donation"]
     aliased = aliased_params(hlo_text)
     donors = donor_params(hlo_text)
     honored = aliased | donors
     violations: List[str] = []
-    if phase == "insert":
-        want = int(budget["insert_min_aliased_params"])
-        if len(aliased) < want:
-            violations.append(
-                f"insert: only {len(aliased)} donated store params aliased "
-                f"in the executable (contract requires >= {want}); donated "
-                f"buffers are being copied, not reused")
-    elif phase == "query":
-        want = int(budget["query_min_donated_params"])
-        if len(honored) < want:
-            violations.append(
-                f"query: donate=True but no input buffer is aliased or "
-                f"registered as a donor (contract requires >= {want}); "
-                f"the query buffer is silently copied every step")
+    want_aliased = budget.get(f"{phase}_min_aliased_params")
+    if want_aliased is not None and len(aliased) < int(want_aliased):
+        violations.append(
+            f"{phase}: only {len(aliased)} donated params aliased in the "
+            f"executable (contract requires >= {int(want_aliased)}); "
+            f"donated buffers are being copied, not reused")
+    want_donated = budget.get(f"{phase}_min_donated_params")
+    if want_donated is not None and len(honored) < int(want_donated):
+        violations.append(
+            f"{phase}: only {len(honored)} input buffers aliased or "
+            f"registered as donors (contract requires >= "
+            f"{int(want_donated)}); the donated buffer is silently "
+            f"copied every step")
     return {
         "phase": phase,
         "aliased_params": sorted(aliased),

@@ -21,7 +21,9 @@ from repro.core.accounting import (COLLECTIVES_PER_INSERT,
 from repro.core.simulate import (StreamReport, lsh_topk_reference,
                                  recall_at_k, simulate, simulate_stream)
 from repro.core.ref_search import nearest_neighbor, nearest_neighbors
-from repro.core.index import DistributedLSHIndex, first_occurrence_mask
+from repro.core.index import (DispatchedBatch, DistributedLSHIndex,
+                              QueryResult, ScannedBatch,
+                              first_occurrence_mask)
 
 __all__ = [
     "LSHConfig", "Scheme", "collision_probability", "p_collision",
@@ -35,4 +37,5 @@ __all__ = [
     "lsh_topk_reference", "recall_at_k",
     "nearest_neighbor", "nearest_neighbors",
     "DistributedLSHIndex", "first_occurrence_mask",
+    "QueryResult", "DispatchedBatch", "ScannedBatch",
 ]

@@ -296,6 +296,48 @@ class QueryResult:
         return self.topk_gid[:, 0]
 
 
+@dataclasses.dataclass
+class DispatchedBatch:
+    """Device-resident output of ``query_dispatch`` (stage 1 of 3).
+
+    ``recv`` is the post-all_to_all routed payload -- each shard's
+    (S*Cq, d+2) int32 block of [q | qid | table] rows, concatenated
+    over shards.  It is consumed (donated) by ``query_scan``.
+    """
+    recv: jax.Array           # (S*S*Cq, d+2) routed int32 payload
+    fq: jax.Array             # (m,) rows shipped per query
+    drops: jax.Array          # (S,) capacity drops per source shard
+    m: int
+    Cq: int
+
+
+@dataclasses.dataclass
+class ScannedBatch:
+    """Device-resident output of ``query_scan`` (stage 2 of 3).
+
+    ``ret`` holds each shard's local per-qid top-K (bitcast distances,
+    gids, emit count): the routed return payload.  It is consumed
+    (donated) by ``query_return``.
+    """
+    ret: jax.Array            # (S*m, 2K+1) int32 return payload
+    recv_load: jax.Array      # (S,) live rows received per shard
+    m: int
+    K: int
+
+
+def _host_query_result(gtopd, gtopg, gemit, fq, load, drops) -> QueryResult:
+    """Fetch device query outputs into a host QueryResult (blocks)."""
+    gtopd = np.asarray(gtopd)
+    return QueryResult(
+        topk_dist=np.sqrt(np.where(gtopd < np.float32(3e38), gtopd,
+                                   np.inf)),
+        topk_gid=np.asarray(gtopg),
+        n_within_cr=np.asarray(gemit),
+        fq=np.asarray(fq).reshape(-1),
+        query_load=np.asarray(load),
+        drops=int(np.asarray(drops).sum()))
+
+
 class DistributedLSHIndex:
     """T fused hash tables of the paper's scheme over one mesh axis.
 
@@ -999,16 +1041,29 @@ class DistributedLSHIndex:
         }
 
     # ------------------------------------------------------------------
-    # Query
+    # Query: one routed step built from three stage bodies (dispatch /
+    # scan / return) shared between the fused synchronous path and the
+    # separately-invocable staged path the serving pipeline overlaps.
     # ------------------------------------------------------------------
-    def _make_query_fn(self, m: int, cap: int, Cq: int, donate: bool,
-                       K: int, ns: int, G: int):
+    def _query_bodies(self, m: int, Cq: int, cap: int, K: int, ns: int,
+                      G: int):
+        """Build the three per-shard stage bodies of the query step.
+
+        ``_make_query_fn`` composes all three inside ONE shard_map (the
+        synchronous path); ``_make_query_dispatch_fn`` / ``_scan_fn`` /
+        ``_return_fn`` wrap each body in its own shard_map so a serving
+        pipeline can enqueue batch i+1's dispatch all_to_all while batch
+        i is still in its scan / return stages.  The bodies are shared
+        closures, so the staged path is op-for-op the fused trace cut at
+        the two all_to_all boundaries; stage payloads are exact int32
+        buffers (floats bitcast), so no precision is lost crossing a
+        boundary and staged results are bitwise identical (tested).
+        """
         cfg = self.cfg
         sparams, skeys = self.stacked_params, self.stacked_keys
         S, L, T, d = cfg.n_shards, cfg.L, cfg.n_tables, cfg.d
         axis = self.axis
         m_loc = m // S
-        cr2 = jnp.float32((cfg.c * cfg.r) ** 2)
         use_kernel = self.use_kernel
         use_csr = self.use_csr
 
@@ -1027,15 +1082,9 @@ class DistributedLSHIndex:
             earlier = jnp.arange(L)[:, None] > jnp.arange(L)[None, :]
             return ~jnp.any(eq & earlier, axis=-1)      # (L,)
 
-        def query_shard(q_loc, qid_loc, store_x, store_packed, store_gid,
-                        store_table, store_valid, store_bs, store_be):
-            # stores arrive with a leading per-shard block dim of 1
-            store_x, store_packed = store_x[0], store_packed[0]
-            store_gid, store_valid = store_gid[0], store_valid[0]
-            store_table = store_table[0]
-            store_bs, store_be = store_bs[0], store_be[0]
-            me = jax.lax.axis_index(axis)
-
+        def dispatch_body(q_loc, qid_loc):
+            """Stage 1: route.  Hash T x L offsets, pack the payload and
+            issue the ONE fused dispatch all_to_all."""
             # ---- route: each local query's T x L offsets hashed in ONE
             # vmapped pass, params broadcast over the stacked T axis (the
             # trace no longer grows with T) ----
@@ -1066,6 +1115,13 @@ class DistributedLSHIndex:
             nslots = S * Cq
             sbuf = scatter_rows(slot, keep, payload, nslots, IMAX)
             r = _a2a(sbuf, axis)                         # (S*Cq, d+2)
+            return r, fq_local, drops
+
+        def scan_body(r, store_x, store_packed, store_gid, store_table,
+                      store_valid, store_bs, store_be):
+            """Stage 2: receive-side hash-once + bucket search + local
+            per-qid union across tables.  No collectives."""
+            me = jax.lax.axis_index(axis)
             rq = _i2f(r[:, :d])
             rid = r[:, d]
             rtab = r[:, d + 1]
@@ -1138,13 +1194,18 @@ class DistributedLSHIndex:
             emit = jnp.zeros((m + 1,), jnp.int32).at[qid_sink].add(
                 jnp.where(rvalid, row_emit, 0))[:m]
 
-            # ---- result return path: ONE routed all_to_all ships each
-            # qid's local top-K (+ emit count) only to the qid's OWNER
-            # shard (qid // m_loc), replacing the old all_gather +
-            # replicated K-way merge + emit psum: O(m*K) received per
-            # shard instead of O(S*m*K) ----
+            # ---- return payload: each qid's local top-K (+ emit count)
+            # as one int32 row, ready for the routed return a2a ----
             ret = jnp.concatenate([
                 _f2i(loc_d), loc_g, emit[:, None]], axis=1)  # (m, 2K+1)
+            return ret, recv_load
+
+        def return_body(ret):
+            """Stage 3: ONE routed all_to_all ships each qid's local
+            top-K (+ emit count) only to the qid's OWNER shard
+            (qid // m_loc), replacing the old all_gather + replicated
+            K-way merge + emit psum: O(m*K) received per shard instead
+            of O(S*m*K)."""
             recv = _a2a(ret, axis).reshape(S, m_loc, 2 * K + 1)
             cand_d = jnp.moveaxis(_i2f(recv[:, :, :K]), 0, 1)
             cand_g = jnp.moveaxis(recv[:, :, K:2 * K], 0, 1)
@@ -1152,15 +1213,80 @@ class DistributedLSHIndex:
                 cand_d.reshape(m_loc, S * K),
                 cand_g.reshape(m_loc, S * K), K)            # (m_loc, K)
             gemit = recv[:, :, 2 * K].sum(axis=0).astype(jnp.int32)
+            return gtopd, gtopg, gemit
+
+        return dispatch_body, scan_body, return_body
+
+    def _make_query_fn(self, m: int, cap: int, Cq: int, donate: bool,
+                       K: int, ns: int, G: int):
+        dispatch_body, scan_body, return_body = self._query_bodies(
+            m, Cq, cap, K, ns, G)
+
+        def query_shard(q_loc, qid_loc, store_x, store_packed, store_gid,
+                        store_table, store_valid, store_bs, store_be):
+            r, fq_local, drops = dispatch_body(q_loc, qid_loc)
+            # stores arrive with a leading per-shard block dim of 1
+            ret, recv_load = scan_body(
+                r, store_x[0], store_packed[0], store_gid[0],
+                store_table[0], store_valid[0], store_bs[0], store_be[0])
+            gtopd, gtopg, gemit = return_body(ret)
             return (gtopd, gtopg, gemit, fq_local, recv_load[None],
                     drops[None])
 
-        spec = P(axis)
+        spec = P(self.axis)
         return jax.jit(shard_map(
             query_shard, mesh=self.mesh,
             in_specs=(spec,) * 9, out_specs=(spec,) * 6,
             check_vma=False,   # pallas out_shape has no vma annotation
         ), donate_argnums=(0,) if donate else ())
+
+    def _make_query_dispatch_fn(self, m: int, Cq: int, donate: bool):
+        # cap/K/ns/G shape only the scan/return bodies; any values do
+        dispatch_body, _, _ = self._query_bodies(m, Cq, 0, 1, 0, 1)
+
+        def dispatch_shard(q_loc, qid_loc):
+            r, fq_local, drops = dispatch_body(q_loc, qid_loc)
+            return r, fq_local, drops[None]
+
+        spec = P(self.axis)
+        return jax.jit(shard_map(
+            dispatch_shard, mesh=self.mesh,
+            in_specs=(spec, spec), out_specs=(spec,) * 3,
+            check_vma=False,
+        ), donate_argnums=(0,) if donate else ())
+
+    def _make_query_scan_fn(self, m: int, cap: int, Cq: int, K: int,
+                            ns: int, G: int):
+        _, scan_body, _ = self._query_bodies(m, Cq, cap, K, ns, G)
+
+        def scan_shard(r, store_x, store_packed, store_gid, store_table,
+                       store_valid, store_bs, store_be):
+            # stores arrive with a leading per-shard block dim of 1
+            ret, recv_load = scan_body(
+                r, store_x[0], store_packed[0], store_gid[0],
+                store_table[0], store_valid[0], store_bs[0], store_be[0])
+            return ret, recv_load[None]
+
+        spec = P(self.axis)
+        return jax.jit(shard_map(
+            scan_shard, mesh=self.mesh,
+            in_specs=(spec,) * 8, out_specs=(spec,) * 2,
+            check_vma=False,
+        ), donate_argnums=(0,))   # the routed recv buffer dies here
+
+    def _make_query_return_fn(self, m: int, K: int):
+        # Cq/cap/ns/G shape only the dispatch/scan bodies
+        _, _, return_body = self._query_bodies(m, 8, 0, K, 0, 1)
+
+        def return_shard(ret):
+            return return_body(ret)
+
+        spec = P(self.axis)
+        return jax.jit(shard_map(
+            return_shard, mesh=self.mesh,
+            in_specs=(spec,), out_specs=(spec,) * 3,
+            check_vma=False,
+        ), donate_argnums=(0,))   # the return payload dies here
 
     def query(self, queries: jax.Array, donate: bool = False,
               k_neighbors: Optional[int] = None) -> QueryResult:
@@ -1200,12 +1326,95 @@ class DistributedLSHIndex:
             st.bucket_start, st.bucket_end)
         # each shard returned exactly its own qids' results (the routed
         # return path); the sharded outputs concatenate to (m, K)
-        gtopd = np.asarray(gtopd)
-        return QueryResult(
-            topk_dist=np.sqrt(np.where(gtopd < np.float32(3e38), gtopd,
-                                       np.inf)),
-            topk_gid=np.asarray(gtopg),
-            n_within_cr=np.asarray(gemit),
-            fq=np.asarray(fq).reshape(-1),
-            query_load=np.asarray(load),
-            drops=int(np.asarray(drops).sum()))
+        return _host_query_result(gtopd, gtopg, gemit, fq, load, drops)
+
+    # ------------------------------------------------------------------
+    # Staged query: the same step as separately-invocable stages.  Each
+    # stage call only ENQUEUES device work (jax dispatch is async), so a
+    # pipeline can issue batch i+1's dispatch before batch i's scan and
+    # return have executed -- the host blocks only when it fetches a
+    # retired batch's results.
+    # ------------------------------------------------------------------
+    def _check_query_batch(self, queries: jax.Array,
+                           k_neighbors: Optional[int]) -> tuple[int, int]:
+        if self.store is None:
+            raise RuntimeError("call build() or insert() first")
+        S = self.cfg.n_shards
+        m = queries.shape[0]
+        if m % S:
+            raise ValueError(f"m={m} must divide by n_shards={S}")
+        K = self.k_neighbors if k_neighbors is None else k_neighbors
+        if not 1 <= K <= 128:
+            raise ValueError(f"k_neighbors={K} not in [1, 128]")
+        return m, K
+
+    def query_dispatch(self, queries: jax.Array,
+                       donate: bool = False) -> DispatchedBatch:
+        """Stage 1/3: hash + route the batch through the dispatch a2a.
+
+        Returns device-resident handles immediately (async dispatch).
+        donate=True donates the query staging buffer -- the pipeline
+        must not refill that buffer until this batch retires.
+        """
+        m, _ = self._check_query_batch(queries, None)
+        Cq = self._query_capacity(m // self.cfg.n_shards)
+        key = ("dispatch", m, Cq, donate)
+        fn = self._query_fns.get(key)
+        if fn is None:
+            fn = self._query_fns[key] = self._make_query_dispatch_fn(
+                m, Cq, donate)
+        qids = jnp.arange(m, dtype=jnp.int32)
+        recv, fq, drops = fn(queries, qids)
+        return DispatchedBatch(recv=recv, fq=fq, drops=drops, m=m, Cq=Cq)
+
+    def query_scan(self, disp: DispatchedBatch,
+                   k_neighbors: Optional[int] = None) -> ScannedBatch:
+        """Stage 2/3: per-shard bucket search over the routed payload.
+
+        Consumes (donates) ``disp.recv``; no collectives are issued.
+        """
+        if self.store is None:
+            raise RuntimeError("call build() or insert() first")
+        K = self.k_neighbors if k_neighbors is None else k_neighbors
+        if not 1 <= K <= 128:
+            raise ValueError(f"k_neighbors={K} not in [1, 128]")
+        st = self.store
+        G = self._gather_window(self.cfg.n_shards * disp.Cq * self.cfg.L)
+        key = ("scan", disp.m, st.capacity, disp.Cq, K, st.n_sorted, G,
+               self.use_csr)
+        fn = self._query_fns.get(key)
+        if fn is None:
+            fn = self._query_fns[key] = self._make_query_scan_fn(
+                disp.m, st.capacity, disp.Cq, K, st.n_sorted, G)
+        ret, recv_load = fn(disp.recv, st.x, st.packed, st.gid, st.table,
+                            st.valid, st.bucket_start, st.bucket_end)
+        return ScannedBatch(ret=ret, recv_load=recv_load, m=disp.m, K=K)
+
+    def query_return(self, scanned: ScannedBatch
+                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Stage 3/3: routed return a2a + owner-shard K-way merge.
+
+        Consumes (donates) ``scanned.ret``; returns device-resident
+        (topk_dist^2, topk_gid, n_within_cr) -- fetch with np.asarray
+        to block on the batch.
+        """
+        key = ("return", scanned.m, scanned.K)
+        fn = self._query_fns.get(key)
+        if fn is None:
+            fn = self._query_fns[key] = self._make_query_return_fn(
+                scanned.m, scanned.K)
+        return fn(scanned.ret)
+
+    def query_staged(self, queries: jax.Array, donate: bool = False,
+                     k_neighbors: Optional[int] = None) -> QueryResult:
+        """Run the three stages back-to-back and fetch the result.
+
+        Semantically identical to ``query()`` (bitwise -- the stages are
+        the fused trace cut at its all_to_all boundaries); used by
+        equivalence tests and as the simplest staged-path reference.
+        """
+        disp = self.query_dispatch(queries, donate=donate)
+        scanned = self.query_scan(disp, k_neighbors=k_neighbors)
+        gtopd, gtopg, gemit = self.query_return(scanned)
+        return _host_query_result(gtopd, gtopg, gemit, disp.fq,
+                                  scanned.recv_load, disp.drops)

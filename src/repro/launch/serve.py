@@ -44,6 +44,10 @@ def main(argv=None):
     ap.add_argument("--snapshot-every", type=int, default=0,
                     help="snapshot (and truncate the WAL) every N query "
                          "batches; 0 = only the boot snapshot")
+    ap.add_argument("--pipelined", action="store_true",
+                    help="serve through AsyncLSHService: double-buffered "
+                         "query pipeline + background snapshots "
+                         "(bitwise-identical results)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -61,7 +65,8 @@ def main(argv=None):
     svc, rr = RetrievalService.recover_or_build(
         cfg, params, doc_tokens, mesh, snapshot_dir=args.snapshot_dir,
         bucket_size=bucket, r=0.2, L=args.L, k=8, W=0.5,
-        scheme=Scheme(args.scheme), seed=args.seed, n_tables=args.tables)
+        scheme=Scheme(args.scheme), seed=args.seed, n_tables=args.tables,
+        pipelined=args.pipelined)
     if rr is not None:
         # warm restart: snapshot + WAL tail instead of re-embed + rebuild
         print(f"[serve] WARM restart from {args.snapshot_dir} "
@@ -88,8 +93,14 @@ def main(argv=None):
         lat.append(time.monotonic() - t0)
         if (args.snapshot_dir and args.snapshot_every
                 and (b + 1) % args.snapshot_every == 0):
-            persist.snapshot(svc.index, args.snapshot_dir,
-                             wal=svc.service.wal)
+            if args.pipelined:
+                # background snapshot: the engine thread fetches a
+                # consistent point, a writer thread does the file I/O
+                svc.service.snapshot(args.snapshot_dir).result()
+            else:
+                persist.snapshot(svc.index, args.snapshot_dir,
+                                 wal=svc.service.wal)
+    svc.close()
     st = svc.service.stats
     assert st.drops == 0
     n = args.batches * args.batch_size

@@ -6,11 +6,12 @@
   recover  -- restore + idempotent WAL-tail replay (crash convergence)
   WriteAheadLog -- framed, CRC-checked append-before-apply batch log
 """
-from repro.persist.snapshot import (RecoverResult, has_snapshot, recover,
-                                    restore, snapshot, wal_path)
+from repro.persist.snapshot import (RecoverResult, SnapshotWriter,
+                                    has_snapshot, recover, restore,
+                                    snapshot, wal_path)
 from repro.persist.wal import (OP_DELETE, OP_INSERT, WalRecord,
                                WriteAheadLog, iter_records)
 
 __all__ = ["snapshot", "restore", "recover", "RecoverResult",
-           "has_snapshot", "wal_path", "WriteAheadLog", "WalRecord",
-           "iter_records", "OP_INSERT", "OP_DELETE"]
+           "has_snapshot", "wal_path", "SnapshotWriter", "WriteAheadLog",
+           "WalRecord", "iter_records", "OP_INSERT", "OP_DELETE"]

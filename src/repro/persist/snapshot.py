@@ -31,6 +31,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import os
+import threading
 from typing import Optional
 
 import jax.numpy as jnp
@@ -88,6 +89,75 @@ def _leaf(by_path: dict, name: str) -> np.ndarray:
 # Snapshot
 # ---------------------------------------------------------------------------
 
+def _fetch_state(index: DistributedLSHIndex) -> dict:
+    """Fetch everything a snapshot needs as IMMUTABLE host arrays.
+
+    This is the only part of a snapshot that must run at a consistent
+    point in the op stream (between index writes); the returned dict is
+    a self-contained copy, so the file write can happen later on another
+    thread while the index keeps mutating.
+    """
+    return {
+        "rows": index.host_live_rows(),
+        "params": {f: np.asarray(getattr(index.stacked_params, f))
+                   for f in _PARAM_FIELDS},
+        "k_stacked": np.asarray(index.stacked_keys),
+        "k_base": np.asarray(index.base_key),
+        "config": _config_to_dict(index.cfg),
+        "next_gid": int(index._next_gid),
+        "k_neighbors": int(index.k_neighbors),
+        "store_capacity": int(index.store.capacity) if index.store else 0,
+        "merges": int(index._merges),
+    }
+
+
+def _write_state(state: dict, snap_dir: str, *,
+                 wal: Optional[WriteAheadLog] = None,
+                 wal_upto: Optional[int] = None,
+                 step: Optional[int] = None, nshards: int = 4,
+                 keep: Optional[int] = 3) -> str:
+    """Write a fetched state dict to disk (pure file work, no index
+    access -- safe on a background thread).  ``wal_upto`` limits the
+    post-commit WAL truncate to the records the fetch covered; None
+    means a full reset (the synchronous path)."""
+    # persist the sorted layout: rows go to disk in CSR lex order with
+    # their bucket offsets, so a snapshot IS a sorted store image
+    rows = state["rows"]
+    order = store_layout.sort_order(rows["table"], rows["packed"])
+    rows = {k: v[order] for k, v in rows.items()}
+    bs, be = store_layout.bucket_spans(rows["table"], rows["packed"])
+    tree = {f"rows_{k}": v for k, v in rows.items()}
+    tree["rows_bucket_start"] = bs
+    tree["rows_bucket_end"] = be
+    tree.update({f"p_{f}": v for f, v in state["params"].items()})
+    tree["k_stacked"] = state["k_stacked"]
+    tree["k_base"] = state["k_base"]
+    extra = {
+        "schema": _SCHEMA,
+        "kind": "lsh-index-snapshot",
+        "config": state["config"],
+        "next_gid": state["next_gid"],
+        "n_live_rows": int(rows["gid"].shape[0]),
+        "k_neighbors": state["k_neighbors"],
+        # the live store's per-shard reservation: restore defaults to it
+        # (scaled across shard counts) so WAL replay after a crash can't
+        # hit append-region overflow the original stream did not
+        "store_capacity": state["store_capacity"],
+        # sort state: rows_* are in CSR lex order, offsets are on disk;
+        # merges carries the LSM counter across restarts
+        "layout": {"sorted": True, "merges": state["merges"]},
+    }
+    if step is None:
+        step = (checkpoint.latest_step(snap_dir) or 0) + 1
+    path = checkpoint.save(snap_dir, step, tree, extra=extra,
+                           nshards=nshards)
+    if wal is not None:
+        wal.truncate(upto_seq=wal_upto)
+    if keep is not None:
+        checkpoint.prune_old(snap_dir, keep=keep)
+    return path
+
+
 def snapshot(index: DistributedLSHIndex, snap_dir: str, *,
              wal: Optional[WriteAheadLog] = None,
              step: Optional[int] = None, nshards: int = 4,
@@ -102,44 +172,83 @@ def snapshot(index: DistributedLSHIndex, snap_dir: str, *,
     service must not grow its disk footprint with full store copies.
     Returns the step directory path.
     """
-    rows = index.host_live_rows()
-    # persist the sorted layout: rows go to disk in CSR lex order with
-    # their bucket offsets, so a snapshot IS a sorted store image
-    order = store_layout.sort_order(rows["table"], rows["packed"])
-    rows = {k: v[order] for k, v in rows.items()}
-    bs, be = store_layout.bucket_spans(rows["table"], rows["packed"])
-    sp = index.stacked_params
-    tree = {f"rows_{k}": v for k, v in rows.items()}
-    tree["rows_bucket_start"] = bs
-    tree["rows_bucket_end"] = be
-    tree.update({f"p_{f}": np.asarray(getattr(sp, f))
-                 for f in _PARAM_FIELDS})
-    tree["k_stacked"] = np.asarray(index.stacked_keys)
-    tree["k_base"] = np.asarray(index.base_key)
-    extra = {
-        "schema": _SCHEMA,
-        "kind": "lsh-index-snapshot",
-        "config": _config_to_dict(index.cfg),
-        "next_gid": int(index._next_gid),
-        "n_live_rows": int(rows["gid"].shape[0]),
-        "k_neighbors": int(index.k_neighbors),
-        # the live store's per-shard reservation: restore defaults to it
-        # (scaled across shard counts) so WAL replay after a crash can't
-        # hit append-region overflow the original stream did not
-        "store_capacity": int(index.store.capacity) if index.store else 0,
-        # sort state: rows_* are in CSR lex order, offsets are on disk;
-        # merges carries the LSM counter across restarts
-        "layout": {"sorted": True, "merges": int(index._merges)},
-    }
-    if step is None:
+    return _write_state(_fetch_state(index), snap_dir, wal=wal,
+                        step=step, nshards=nshards, keep=keep)
+
+
+class SnapshotWriter:
+    """Background snapshot writer: non-blocking durability for serving.
+
+    ``submit`` fetches the index state on the CALLER's thread (the
+    consistent point in the op stream; the fetched arrays are immutable
+    copies) and hands the file write -- shard files, manifest rename,
+    WAL truncate, pruning -- to a daemon thread.  At most one write is
+    in flight: a submit that arrives while one is running is skipped
+    (returns None, counted) unless ``wait=True``, which joins the
+    previous write first.  The WAL truncate is bounded to the records
+    the fetch covered (``truncate(upto_seq=...)``), so appends landing
+    during the write survive for the next recovery.
+
+    ``join`` (call it on shutdown) waits for the in-flight write and
+    re-raises any error the writer thread hit.
+    """
+
+    def __init__(self):
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self.written = 0
+        self.skipped = 0
+
+    @property
+    def in_flight(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def submit(self, index: DistributedLSHIndex, snap_dir: str, *,
+               wal: Optional[WriteAheadLog] = None, wait: bool = False,
+               nshards: int = 4, keep: Optional[int] = 3
+               ) -> Optional[str]:
+        """Start a background snapshot; returns the target step path, or
+        None if skipped because one is already in flight."""
+        if self.in_flight:
+            if not wait:
+                self.skipped += 1
+                return None
+            self._thread.join()
+        if self._thread is not None:
+            self._thread.join()          # reap the finished writer
+            self._thread = None
+        if self._error is not None:      # surface the previous failure
+            err, self._error = self._error, None
+            raise err
+        state = _fetch_state(index)
+        # the records the fetch covers: appends after this point must
+        # survive the post-commit truncate
+        wal_upto = wal.n_records if wal is not None else None
         step = (checkpoint.latest_step(snap_dir) or 0) + 1
-    path = checkpoint.save(snap_dir, step, tree, extra=extra,
-                           nshards=nshards)
-    if wal is not None:
-        wal.truncate()
-    if keep is not None:
-        checkpoint.prune_old(snap_dir, keep=keep)
-    return path
+        path = os.path.join(snap_dir, f"step_{step}")
+
+        def work():
+            try:
+                _write_state(state, snap_dir, wal=wal, wal_upto=wal_upto,
+                             step=step, nshards=nshards, keep=keep)
+            except BaseException as exc:   # noqa: BLE001 -- re-raised
+                self._error = exc          # on join()/next submit()
+        self._thread = threading.Thread(target=work, daemon=True,
+                                        name="lsh-snapshot-writer")
+        self._thread.start()
+        self.written += 1
+        return path
+
+    def join(self) -> None:
+        """Wait for the in-flight write; re-raise its error if it failed."""
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    close = join
 
 
 # ---------------------------------------------------------------------------

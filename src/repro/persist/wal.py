@@ -20,12 +20,27 @@ still replayed.  The durability contract is therefore:
 ``truncate()`` atomically resets the log to empty (tmp file + rename);
 ``persist.snapshot`` calls it AFTER the snapshot commit, so a crash
 between the two just leaves a tail whose replay is idempotent.
+``truncate(upto_seq=...)`` drops only the records a snapshot covered,
+preserving (with their original seq numbers) records appended while a
+BACKGROUND snapshot was writing.
+
+Group commit: ``WriteAheadLog(group_commit_n=..., group_commit_ms=...)``
+batches fsyncs across appends -- ``append_*`` still returns only after
+the frame reached the OS (process-crash durable, append-before-apply
+unchanged), and the file is fsynced (power-fail durable) no later than
+every ``group_commit_n`` appends or ``group_commit_ms`` milliseconds,
+whichever comes first, plus on ``sync_now``/``truncate``/``close``.
+``sync=True`` remains fsync-per-append.  All mutators take an internal
+lock, so a serving engine thread and a background snapshot writer can
+share one log.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
 import struct
+import threading
+import time
 import zlib
 from typing import Iterator, Optional
 
@@ -68,12 +83,32 @@ def _frame(op: int, seq: int, gids: np.ndarray,
 class WriteAheadLog:
     """Append-only framed batch log (see module docstring for format)."""
 
-    def __init__(self, path: str, sync: bool = False):
+    def __init__(self, path: str, sync: bool = False,
+                 group_commit_n: Optional[int] = None,
+                 group_commit_ms: Optional[float] = None,
+                 clock=time.monotonic):
         """sync=True fsyncs after every append (true power-fail
         durability); the default flushes to the OS only, which survives
-        process crashes -- the regime the tests exercise."""
+        process crashes -- the regime the tests exercise.
+
+        group_commit_n / group_commit_ms bound how many appends / how
+        much time may pass between fsyncs (either alone works; together
+        the first bound hit triggers the sync).  clock is the monotonic
+        time source for the ms window (injectable for tests).
+        """
+        if group_commit_n is not None and group_commit_n < 1:
+            raise ValueError(f"group_commit_n={group_commit_n} must be >= 1")
+        if group_commit_ms is not None and group_commit_ms < 0:
+            raise ValueError(
+                f"group_commit_ms={group_commit_ms} must be >= 0")
         self.path = path
         self.sync = sync
+        self.group_commit_n = group_commit_n
+        self.group_commit_ms = group_commit_ms
+        self._clock = clock
+        self._lock = threading.RLock()
+        self._unsynced = 0
+        self._last_sync = clock()
         os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
         # continue the sequence after the last intact record, and CLIP any
         # torn tail first: appending after garbage bytes would strand the
@@ -91,29 +126,72 @@ class WriteAheadLog:
         return self._append(OP_DELETE, gids, None)
 
     def _append(self, op: int, gids, points) -> int:
-        seq = self._seq
-        self._f.write(_frame(op, seq, np.asarray(gids, np.int64), points))
-        self._f.flush()
-        if self.sync:
-            os.fsync(self._f.fileno())
-        self._seq += 1
-        return seq
+        with self._lock:
+            seq = self._seq
+            self._f.write(_frame(op, seq, np.asarray(gids, np.int64),
+                                 points))
+            self._f.flush()
+            self._unsynced += 1
+            if self.sync or self._group_window_hit():
+                self._fsync_locked()
+            self._seq += 1
+            return seq
 
-    def truncate(self) -> None:
-        """Atomically reset the log to empty (post-snapshot)."""
-        self._f.close()
-        tmp = self.path + ".tmp"
-        with open(tmp, "wb") as f:
-            f.flush()
-            if self.sync:
-                os.fsync(f.fileno())
-        os.replace(tmp, self.path)
-        self._f = open(self.path, "ab")
-        self._seq = 0
+    def _group_window_hit(self) -> bool:
+        n, ms = self.group_commit_n, self.group_commit_ms
+        if n is None and ms is None:
+            return False
+        if n is not None and self._unsynced >= n:
+            return True
+        return (ms is not None
+                and (self._clock() - self._last_sync) * 1e3 >= ms)
+
+    def _fsync_locked(self) -> None:
+        os.fsync(self._f.fileno())
+        self._unsynced = 0
+        self._last_sync = self._clock()
+
+    def sync_now(self) -> None:
+        """Force pending appends to disk (closes the group window)."""
+        with self._lock:
+            if self._unsynced:
+                self._f.flush()
+                self._fsync_locked()
+
+    def truncate(self, upto_seq: Optional[int] = None) -> None:
+        """Atomically drop records the snapshot covered (post-commit).
+
+        With no argument: full reset to an empty log, sequence restarts
+        at 0.  With ``upto_seq``: drop only records with seq < upto_seq
+        and keep the rest VERBATIM (original seq numbers) -- the form a
+        background snapshot uses, since appends may have landed while it
+        was writing and those must survive for the next recovery.
+        """
+        with self._lock:
+            self._f.flush()
+            tmp = self.path + ".tmp"
+            with open(tmp, "wb") as f:
+                if upto_seq is not None:
+                    for rec in iter_records(self.path):
+                        if rec.seq >= upto_seq:
+                            f.write(_frame(rec.op, rec.seq, rec.gids,
+                                           rec.points))
+                f.flush()
+                if self.sync or self.group_commit_n is not None \
+                        or self.group_commit_ms is not None:
+                    os.fsync(f.fileno())
+            self._f.close()
+            os.replace(tmp, self.path)
+            self._f = open(self.path, "ab")
+            if upto_seq is None:
+                self._seq = 0
+            self._unsynced = 0
+            self._last_sync = self._clock()
 
     def records(self) -> Iterator[WalRecord]:
         """Replay every intact record (the torn tail, if any, is dropped)."""
-        self._f.flush()
+        with self._lock:
+            self._f.flush()
         return iter_records(self.path)
 
     @property
@@ -121,7 +199,15 @@ class WriteAheadLog:
         return self._seq
 
     def close(self) -> None:
-        self._f.close()
+        with self._lock:
+            if not self._f.closed and self._unsynced \
+                    and (self.group_commit_n is not None
+                         or self.group_commit_ms is not None):
+                # an open group window must not lose its durability
+                # promise at shutdown
+                self._f.flush()
+                self._fsync_locked()
+            self._f.close()
 
 
 def _intact_prefix(path: str) -> tuple[int, int]:

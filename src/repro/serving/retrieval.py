@@ -25,6 +25,7 @@ from repro.models.config import ModelConfig
 from repro.models.layers import embed as embed_tokens
 from repro.models.transformer import _apply_segment  # reuse blocks
 from repro.serving.service import ShardedLSHService
+from repro.serving.workers import AsyncLSHService, AsyncWrite
 
 
 def embed_texts(params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
@@ -45,7 +46,7 @@ class RetrievalService:
     lsh: LSHConfig
     params: dict
     index: DistributedLSHIndex
-    service: ShardedLSHService
+    service: "ShardedLSHService | AsyncLSHService"
 
     @classmethod
     def build(cls, cfg: ModelConfig, params, doc_tokens, mesh,
@@ -53,10 +54,15 @@ class RetrievalService:
               W: float = 1.0, scheme: Scheme = Scheme.LAYERED,
               seed: int = 0, use_kernel: bool = False,
               bucket_size: int = 64, max_latency_ms: float = 25.0,
-              k_neighbors: int = 1, n_tables: int = 1):
+              k_neighbors: int = 1, n_tables: int = 1,
+              pipelined: bool = False):
         """n_tables > 1 fuses that many independent hash tables into the
         one routed index (the classic recall lever) at NO extra
-        collectives per query -- only extra rows inside the same ones."""
+        collectives per query -- only extra rows inside the same ones.
+
+        pipelined=True serves through ``AsyncLSHService`` (double-
+        buffered query pipeline + worker threads, bitwise-identical
+        results); the default stays the synchronous micro-batcher."""
         docs = embed_texts(params, cfg, doc_tokens)
         lsh = LSHConfig(d=int(docs.shape[1]), k=k, W=W, r=r, c=c, L=L,
                         n_shards=mesh.shape["shard"], scheme=scheme,
@@ -64,9 +70,10 @@ class RetrievalService:
         index = DistributedLSHIndex(lsh, mesh, use_kernel=use_kernel,
                                     k_neighbors=k_neighbors)
         index.build(docs)
-        service = ShardedLSHService(index, bucket_size=bucket_size,
-                                    max_latency_ms=max_latency_ms,
-                                    k_neighbors=k_neighbors)
+        front = AsyncLSHService if pipelined else ShardedLSHService
+        service = front(index, bucket_size=bucket_size,
+                        max_latency_ms=max_latency_ms,
+                        k_neighbors=k_neighbors)
         return cls(cfg=cfg, lsh=lsh, params=params, index=index,
                    service=service)
 
@@ -75,7 +82,8 @@ class RetrievalService:
                          snapshot_dir: "str | None" = None,
                          bucket_size: int = 64,
                          max_latency_ms: float = 25.0,
-                         k_neighbors: int = 1, **build_kwargs):
+                         k_neighbors: int = 1, pipelined: bool = False,
+                         **build_kwargs):
         """The durable entry point shared by the serve drivers.
 
         With a ``snapshot_dir`` holding a snapshot: warm-restart (restore
@@ -109,13 +117,24 @@ class RetrievalService:
                     f"{ {k: f'{want} (snapshot: {have})' for k, (want, have) in drift.items()} } "
                     f"-- rebuild without --snapshot-dir (or a fresh dir) "
                     f"to apply them", stacklevel=2)
+            service = rr.service
+            if pipelined:
+                # replay ran through the recovered synchronous service;
+                # serve through the pipelined front-end from here on,
+                # carrying its stats (replay flush counts) and WAL
+                service = AsyncLSHService(
+                    rr.index, bucket_size=bucket_size,
+                    max_latency_ms=max_latency_ms,
+                    k_neighbors=k_neighbors, wal=rr.wal,
+                    stats=rr.service.stats)
             svc = cls(cfg=cfg, lsh=rr.index.cfg, params=params,
-                      index=rr.index, service=rr.service)
+                      index=rr.index, service=service)
             return svc, rr
         svc = cls.build(cfg, params, doc_tokens, mesh,
                         bucket_size=bucket_size,
                         max_latency_ms=max_latency_ms,
-                        k_neighbors=k_neighbors, **build_kwargs)
+                        k_neighbors=k_neighbors, pipelined=pipelined,
+                        **build_kwargs)
         if snapshot_dir:
             svc.service.wal = persist.WriteAheadLog(
                 persist.wal_path(snapshot_dir))
@@ -128,6 +147,8 @@ class RetrievalService:
             return np.empty((0,), np.int64)
         docs = embed_texts(self.params, self.cfg, doc_tokens)
         res = self.service.insert(docs)
+        if isinstance(res, AsyncWrite):
+            res = res.result()       # pipelined front-end returns a future
         if res.drops:
             # dropped rows are not the trailing ones, so the gid->doc
             # attribution below would silently lie -- refuse instead
@@ -148,3 +169,8 @@ class RetrievalService:
         gids = np.stack([h.gids for h in handles])
         dists = np.stack([h.dists for h in handles])
         return gids, dists, handles
+
+    def close(self) -> None:
+        """Drain and stop a pipelined service (no-op for the sync one)."""
+        if isinstance(self.service, AsyncLSHService):
+            self.service.close()

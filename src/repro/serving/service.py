@@ -49,6 +49,7 @@ class PendingQuery:
     dists: Optional[np.ndarray] = None   # (K,) ascending dists (inf-padded)
     n_within_cr: int = 0          # candidates within cr across all shards
     fq: int = 0                   # routed rows (Definition 7)
+    t_submit: float = 0.0         # service clock at admission (for latency)
 
     def result(self) -> "PendingQuery":
         """Block until resolved (forces a flush of the owning bucket)."""
@@ -84,6 +85,33 @@ class ServiceStats:
     store_sorted_rows: int = 0    # live rows in the bucket-sorted region
     store_tail_rows: int = 0      # live rows in the unsorted insert tail
     store_merges: int = 0         # LSM tail merges (incl. compactions)
+    # async front-end accounting (zero when serving synchronously)
+    queue_peak: int = 0           # deepest the admission queue has been
+    inflight_peak: int = 0        # most pipelined batches in flight at once
+    rejects: int = 0              # admissions refused (admission="reject")
+    snapshots: int = 0            # background snapshots written
+    snapshots_skipped: int = 0    # snapshot requests skipped (one in flight)
+    # per-query latency reservoir (submit -> resolve, ms).  Bounded: keeps
+    # the most recent _LAT_CAP samples so a long-lived service doesn't
+    # grow without bound; percentiles reflect recent traffic.
+    _lat_ms: list = dataclasses.field(default_factory=list, repr=False)
+
+    _LAT_CAP = 8192
+
+    def record_latency(self, ms: float) -> None:
+        self._lat_ms.append(ms)
+        if len(self._lat_ms) > 2 * self._LAT_CAP:
+            del self._lat_ms[:-self._LAT_CAP]
+
+    @property
+    def latency_p50_ms(self) -> float:
+        lat = self._lat_ms[-self._LAT_CAP:]
+        return float(np.percentile(lat, 50)) if lat else 0.0
+
+    @property
+    def latency_p99_ms(self) -> float:
+        lat = self._lat_ms[-self._LAT_CAP:]
+        return float(np.percentile(lat, 99)) if lat else 0.0
 
     @property
     def collectives_issued(self) -> int:
@@ -122,7 +150,15 @@ class ServiceStats:
                 f"store=sorted:{self.store_sorted_rows}"
                 f"+tail:{self.store_tail_rows} "
                 f"merges={self.store_merges} "
-                f"drops={self.drops}")
+                f"lat(p50/p99)={self.latency_p50_ms:.1f}/"
+                f"{self.latency_p99_ms:.1f}ms "
+                + (f"queue_peak={self.queue_peak} "
+                   f"inflight_peak={self.inflight_peak} "
+                   f"rejects={self.rejects} "
+                   f"snapshots={self.snapshots}"
+                   f"(+{self.snapshots_skipped} skipped) "
+                   if self.inflight_peak or self.queue_peak else "")
+                + f"drops={self.drops}")
 
 
 class ShardedLSHService:
@@ -130,7 +166,9 @@ class ShardedLSHService:
 
     def __init__(self, index: DistributedLSHIndex, bucket_size: int = 64,
                  max_latency_ms: float = 25.0,
-                 k_neighbors: Optional[int] = None, wal=None):
+                 k_neighbors: Optional[int] = None, wal=None,
+                 clock=time.monotonic,
+                 stats: Optional[ServiceStats] = None):
         """k_neighbors: top-K returned per query (defaults to the index's
         own k_neighbors); every flush reuses the one K-specialised
         compiled executable.
@@ -139,7 +177,14 @@ class ShardedLSHService:
         every insert/delete batch is appended (gids + raw float32 points)
         BEFORE it is applied to the index -- the durability contract is
         "appended == will survive a crash" (``persist.recover`` replays
-        the tail idempotently on top of the latest snapshot)."""
+        the tail idempotently on top of the latest snapshot).
+
+        clock: monotonic-seconds callable used for deadlines, latency
+        and timing stats (injectable so SLO tests advance time without
+        sleeping).
+
+        stats: share an existing ServiceStats (the async front-end embeds
+        this service for its write path and keeps ONE accounting view)."""
         S = index.cfg.n_shards
         if bucket_size % S:
             raise ValueError(
@@ -152,7 +197,8 @@ class ShardedLSHService:
         if not 1 <= self.k_neighbors <= 128:
             raise ValueError(
                 f"k_neighbors={self.k_neighbors} not in [1, 128]")
-        self.stats = ServiceStats()
+        self.stats = ServiceStats() if stats is None else stats
+        self._clock = clock
         self.wal = wal
         self._replaying = False   # persist.recover: apply without re-append
         self._pending: List[PendingQuery] = []
@@ -179,16 +225,16 @@ class ShardedLSHService:
             self._pending.append(h)
             self._pending_q.append(row)
             handles.append(h)
+            h.t_submit = self._clock()
             if self._deadline is None:
-                self._deadline = (time.monotonic()
-                                  + self.max_latency_ms / 1e3)
+                self._deadline = h.t_submit + self.max_latency_ms / 1e3
             if len(self._pending) >= self.bucket_size:
                 self.flush(reason="full")
         return handles
 
     def _check_deadline(self) -> None:
         if (self._pending and self._deadline is not None
-                and time.monotonic() >= self._deadline):
+                and self._clock() >= self._deadline):
             self.flush(reason="deadline")
 
     def flush(self, reason: str = "manual") -> int:
@@ -207,14 +253,14 @@ class ShardedLSHService:
         # requeued query keeps its original SLO instead of losing the
         # deadline until a fresh submit arrives
         prev_deadline = self._deadline
-        self._deadline = (time.monotonic() + self.max_latency_ms / 1e3
+        self._deadline = (self._clock() + self.max_latency_ms / 1e3
                           if self._pending else None)
 
         pad = self.bucket_size - take
         # staging buffer: fresh per flush and dead after -- donated
         buf = np.zeros((self.bucket_size, self.index.cfg.d), np.float32)
         buf[:take] = rows
-        t0 = time.monotonic()
+        t0 = self._clock()
         try:
             res = self.index.query(jnp.asarray(buf), donate=True,
                                    k_neighbors=self.k_neighbors)
@@ -227,8 +273,10 @@ class ShardedLSHService:
             self._pending_q[:0] = rows
             self._deadline = prev_deadline
             raise
-        dt = time.monotonic() - t0
+        now = self._clock()
+        dt = now - t0
 
+        st = self.stats
         for i, h in enumerate(handles):
             h.gids = res.topk_gid[i].copy()
             h.dists = res.topk_dist[i].copy()
@@ -237,8 +285,8 @@ class ShardedLSHService:
             h.n_within_cr = int(res.n_within_cr[i])
             h.fq = int(res.fq[i])
             h.done = True
+            st.record_latency((now - h.t_submit) * 1e3)
 
-        st = self.stats
         st.queries += take
         st.batches += 1
         st.pad_rows += pad
@@ -293,9 +341,9 @@ class ShardedLSHService:
                                  f"({points.shape[0]}) length mismatch")
             check_gid_range(gids)
             self.wal.append_insert(gids, points)
-        t0 = time.monotonic()
+        t0 = self._clock()
         res = self.index.insert(points, gids=gids)
-        self.stats.insert_time_s += time.monotonic() - t0
+        self.stats.insert_time_s += self._clock() - t0
         self.stats.inserts += res.n_inserted
         self.stats.insert_rows += res.rows_stored
         self.stats.insert_batches += 1

@@ -7,7 +7,12 @@ crash-consistency semantics the recovery path builds on:
   * a torn trailing write (partial frame) is dropped on replay and
     CLIPPED on reopen, so post-crash appends stay reachable;
   * CRC failures stop replay at the corrupt frame;
-  * truncate atomically resets the log and the sequence numbers.
+  * truncate atomically resets the log and the sequence numbers;
+  * group commit fsyncs no later than every N appends / M ms (whichever
+    first), plus on sync_now/truncate/close, while append stays
+    flush-to-OS (process-crash durable) in between;
+  * truncate(upto_seq=...) keeps later records VERBATIM with their
+    original seqs (the background-snapshot form).
 """
 import os
 
@@ -16,6 +21,16 @@ import pytest
 
 from repro.persist import (OP_DELETE, OP_INSERT, WriteAheadLog,
                            iter_records)
+
+
+@pytest.fixture
+def fsync_count(monkeypatch):
+    """Count os.fsync calls (the group-commit durability points)."""
+    calls = []
+    real = os.fsync
+    monkeypatch.setattr(os, "fsync", lambda fd: (calls.append(fd),
+                                                 real(fd))[1])
+    return calls
 
 
 @pytest.fixture
@@ -99,4 +114,85 @@ def test_empty_and_missing_log(tmp_path):
     assert list(iter_records(str(tmp_path / "nope.log"))) == []
     w = WriteAheadLog(str(tmp_path / "empty.log"))
     assert w.n_records == 0 and list(w.records()) == []
+    w.close()
+
+
+def test_group_commit_n_batches_fsyncs(wal_file, fsync_count):
+    w = WriteAheadLog(wal_file, group_commit_n=3)
+    for _ in range(7):
+        w.append_delete([1])
+    assert len(fsync_count) == 2            # after appends 3 and 6
+    w.sync_now()                            # closes the open window (1)
+    assert len(fsync_count) == 3
+    w.sync_now()                            # nothing unsynced: no-op
+    assert len(fsync_count) == 3
+    w.append_delete([2])
+    w.close()                               # open window flushed at close
+    assert len(fsync_count) == 4
+    assert [r.seq for r in iter_records(wal_file)] == list(range(8))
+
+
+def test_group_commit_ms_window(wal_file, fsync_count):
+    t = [0.0]
+    w = WriteAheadLog(wal_file, group_commit_ms=50.0, clock=lambda: t[0])
+    w.append_delete([1])                    # 0ms since last sync
+    assert len(fsync_count) == 0
+    t[0] = 0.049
+    w.append_delete([2])                    # still inside the window
+    assert len(fsync_count) == 0
+    t[0] = 0.051
+    w.append_delete([3])                    # window expired -> fsync
+    assert len(fsync_count) == 1
+    t[0] = 0.09
+    w.append_delete([4])                    # new window from 0.051
+    assert len(fsync_count) == 1
+    w.close()
+    assert len(fsync_count) == 2
+
+
+def test_group_commit_validation(wal_file):
+    with pytest.raises(ValueError, match="group_commit_n"):
+        WriteAheadLog(wal_file, group_commit_n=0)
+    with pytest.raises(ValueError, match="group_commit_ms"):
+        WriteAheadLog(wal_file, group_commit_ms=-1.0)
+    w = WriteAheadLog(wal_file)             # no group commit: plain close
+    w.append_delete([1])
+    w.close()
+
+
+def test_partial_truncate_keeps_later_records(wal_file):
+    """truncate(upto_seq=k) drops seq < k and keeps the rest verbatim --
+    the background-snapshot form (appends landed while it wrote)."""
+    w = WriteAheadLog(wal_file)
+    pts = np.arange(6, dtype=np.float32).reshape(3, 2)
+    for i in range(3):
+        w.append_insert([10 + i], pts[i:i + 1])
+    upto = w.n_records                      # snapshot covered seqs 0-2
+    w.append_insert([13], pts[:1])          # lands "during the write"
+    w.append_delete([10])
+    w.truncate(upto_seq=upto)
+    assert w.n_records == 5                 # sequence does NOT restart
+    recs = list(w.records())
+    assert [(r.op, r.seq) for r in recs] == [(OP_INSERT, 3), (OP_DELETE, 4)]
+    np.testing.assert_array_equal(recs[0].gids, [13])
+    np.testing.assert_array_equal(recs[0].points, pts[:1])
+    w.append_delete([13])                   # continues at seq 5
+    w.close()
+    assert [r.seq for r in iter_records(wal_file)] == [3, 4, 5]
+
+    # reopen after a partial truncate: sequence continues, replay sees
+    # exactly the preserved tail
+    w2 = WriteAheadLog(wal_file)
+    assert w2.n_records == 6
+    assert w2.append_delete([99]) == 6
+    w2.close()
+    assert [r.seq for r in iter_records(wal_file)] == [3, 4, 5, 6]
+
+
+def test_partial_truncate_past_end_empties(wal_file):
+    w = WriteAheadLog(wal_file)
+    w.append_delete([1])
+    w.truncate(upto_seq=10)                 # covered everything
+    assert list(w.records()) == []
+    assert w.append_delete([2]) == 1        # allocator keeps counting
     w.close()
